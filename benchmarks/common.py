@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing + the standard experiment setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]      # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6      # us
+
+
+def experiment_problem(n_tasks: int = 128, n_platforms: int = 16,
+                       seed: int = 1):
+    """The paper's full workload: 128 MC tasks on the Table II cluster."""
+    from repro.core import iaas
+    from repro.pricing import simulate
+    from repro.pricing import tasks as taskgen
+
+    plats = iaas.paper_platforms()[:n_platforms]
+    tasks = [t.with_paths(int(2e8)) for t in taskgen.generate_tasks(
+        n_tasks, seed=seed)]
+    fitted, true = simulate.fit_problem(tasks, plats, seed=seed)
+    return fitted, true, plats, tasks

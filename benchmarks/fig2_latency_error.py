@@ -1,0 +1,18 @@
+"""Paper Fig. 2: latency-model relative prediction error distribution."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import experiment_problem
+from repro.pricing import simulate
+
+
+def run() -> list:
+    fitted, true, *_ = experiment_problem()
+    rows = []
+    for scale in (1.0, 2.0, 4.0):
+        err = simulate.model_relative_error(fitted, true, scale=scale)
+        rows.append((f"fig2.scale{scale:g}x", 0.0,
+                     f"mean={err.mean():.3f};p50={np.median(err):.3f};"
+                     f"p95={np.quantile(err, 0.95):.3f};max={err.max():.3f}"))
+    return rows

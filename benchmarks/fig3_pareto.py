@@ -1,0 +1,32 @@
+"""Paper Fig. 1/3: the latency-cost design space — ILP frontier vs the
+heuristic frontier, model-predicted AND validated on the true models."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import experiment_problem
+from repro.core import heuristics, pareto
+
+
+def run() -> list:
+    fitted, true, *_ = experiment_problem(32, 16, seed=4)
+    t_ilp = pareto.milp_tradeoff(fitted, n_points=5, backend="highs",
+                                 time_limit_s=20)
+    t_heur = pareto.heuristic_tradeoff(fitted, n_points=5)
+    rows = []
+    for tag, t in (("ilp", t_ilp), ("heur", t_heur)):
+        c, l = t.as_arrays()
+        ref_c, ref_l = c.max() * 1.1 + 1, l.max() * 1.1 + 1
+        hv = pareto.hypervolume(c, l, ref_c, ref_l)
+        rows.append((f"fig3.{tag}.frontier", 0.0,
+                     ";".join(f"({ci:.2f}$,{li:.0f}s)" for ci, li in
+                              zip(c, l)) + f";hv={hv:.0f}"))
+        # validation on true models (paper: model vs measured curves)
+        errs = []
+        for p in t.points:
+            mk_pred, _ = heuristics.evaluate(fitted, p.alloc)
+            mk_true, _ = heuristics.evaluate(true, p.alloc)
+            errs.append(abs(mk_true - mk_pred) / mk_true)
+        rows.append((f"fig3.{tag}.model_vs_true", 0.0,
+                     f"mean_err={np.mean(errs):.3f};max_err={np.max(errs):.3f}"))
+    return rows

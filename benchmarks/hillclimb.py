@@ -1,0 +1,90 @@
+"""§Perf hillclimb driver: baseline + optimization variants for the three
+chosen cells (worst roofline fraction / most collective-bound / most
+representative), re-measured with identical machinery.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --out results/hillclimb.json
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+# (cell, variant-name, opts, hypothesis)
+PLAN = [
+    # ---- A: worst roofline fraction — quadratic-attention memory ----
+    ("qwen1.5-4b", "prefill_32k", "A0-baseline", {},
+     "baseline: naive attention materialises (B,H,32k,32k) f32 logits"),
+    ("qwen1.5-4b", "prefill_32k", "A1-chunked-attn",
+     dict(attn_impl="chunked"),
+     "flash-style q-chunking: live logits slab 64x smaller; bf16 probs "
+     "halve the PV-pass bytes -> t_memory down ~30-50%, temp/dev ~100x"),
+    ("qwen1.5-4b", "prefill_32k", "A2-pin-cache-sharding",
+     dict(attn_impl="chunked", pin_outputs=True),
+     "A1 left the RETURNED kv cache replicated by GSPMD (430GB/dev "
+     "output): pin out_shardings to the decode cache layout -> output "
+     "bytes ~100x down, collective gathers disappear"),
+    ("qwen1.5-4b", "prefill_32k", "A3-sp",
+     dict(attn_impl="chunked", pin_outputs=True, seq_parallel=True),
+     "the 20-head MHA (non-divisible by 16) forces replicated "
+     "projections; SP seq-shards the residual stream so they compute on "
+     "1/16 tokens -> collective down ~16x"),
+    # ---- B: most collective-bound — MoE decode weight gathering ----
+    ("kimi-k2-1t-a32b", "decode_32k", "B0-baseline", {},
+     "baseline: EP shard_map gathers 2D-sharded expert weights over "
+     "'data' every step (~60GB/step) -> t_collective 4.8s"),
+    ("kimi-k2-1t-a32b", "decode_32k", "B1-weight-stationary",
+     dict(moe_impl="2d"),
+     "weight-stationary 2D path: replicate the 128-token batch over "
+     "'data' (1.8MB) instead; psum down-proj partials -> t_collective "
+     "down ~100x to the a2a+psum floor"),
+    # ---- C: paper-representative trainer ----
+    ("granite-34b", "train_4k", "C0-baseline", {},
+     "baseline: TP all-reduce 2/layer/dir, full remat; collective 32.7s"),
+    ("granite-34b", "train_4k", "C1-seq-parallel",
+     dict(seq_parallel=True),
+     "Megatron SP: all-reduce -> reduce-scatter+all-gather = half the "
+     "ring bytes; norms/residuals on 1/16 tokens -> t_coll ~-50%"),
+    ("granite-34b", "train_4k", "C2-sp+chunked-vocab",
+     dict(seq_parallel=True, loss_impl="chunked_vocab"),
+     "chunked-vocab CE: drop the (B,S,V) f32 logits materialisation "
+     "-> t_memory and temp/dev down"),
+    ("granite-34b", "train_4k", "C3-sp+cv+chunked-attn",
+     dict(seq_parallel=True, loss_impl="chunked_vocab",
+          attn_impl="chunked"),
+     "chunked attention inside remat: smaller live slabs; bf16 probs "
+     "halve PV bytes across 88 layers"),
+    # ---- D: bonus — recipe generalisation (largest-vocab arch) ----
+    ("gemma3-1b", "train_4k", "D0-gemma3-baseline", {},
+     "baseline for the recipe-generalisation check"),
+    ("gemma3-1b", "train_4k", "D1-gemma3-sp+cv",
+     dict(seq_parallel=True, loss_impl="chunked_vocab"),
+     "C2's recipe on a 262k-vocab arch: the chunked-vocab lever is "
+     "largest here"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/hillclimb.json")
+    ap.add_argument("--only", default=None, help="prefix filter e.g. C")
+    args = ap.parse_args()
+    results = []
+    for arch, shape, name, opts, hyp in PLAN:
+        if args.only and not name.startswith(args.only):
+            continue
+        print(f"\n=== {name}: {arch} x {shape} {opts} ===", flush=True)
+        rec = run_cell(arch, shape, verbose=True, **opts)
+        rec["variant"] = name
+        rec["hypothesis"] = hyp
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    print("\nwrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""MC pricing kernel throughput: Pallas(interpret, CPU) for validation,
+jnp oracle (XLA CPU) as the runtime-relevant number, with the
+paths*steps/s 'derived' column."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.kernels.mc_pricing import BLOCK_PATHS, mc_price_sums
+from repro.kernels.ref import mc_price_sums_ref
+from repro.pricing.options import KIND_IDS, OptionTask
+
+
+def run() -> list:
+    rows = []
+    cases = [("european_call", 1, 16), ("asian_call", 64, 4)]
+    for kind, steps, n_blocks in cases:
+        t = OptionTask("b", kind, 100, 100, 0.03, 0.3, 1.0, steps=steps
+                       ).with_paths(n_blocks * BLOCK_PATHS)
+        params = jnp.asarray(np.stack([t.param_row()]))
+        kid = KIND_IDS[kind]
+        work = t.n_paths * steps
+
+        us_ref = timeit(lambda: mc_price_sums_ref(
+            params, kind_id=kid, steps=steps,
+            n_blocks=n_blocks)[0].block_until_ready())
+        rows.append((f"mc.{kind}.s{steps}.xla_ref", us_ref,
+                     f"paths_steps_per_s={work / (us_ref / 1e6):.3e}"))
+        us_pal = timeit(lambda: mc_price_sums(
+            params, kind_id=kid, steps=steps,
+            n_blocks=n_blocks)[0].block_until_ready(), repeats=1)
+        rows.append((f"mc.{kind}.s{steps}.pallas_interp", us_pal,
+                     f"paths_steps_per_s={work / (us_pal / 1e6):.3e}"))
+    return rows

@@ -1,0 +1,101 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run results JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        results/dryrun_all.json > results/roofline.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_t(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | step | compile | bytes/dev | fits v5e (16G) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP | - | - | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR | - | - | - |")
+            continue
+        mem = r.get("memory", {})
+        per_dev = mem.get("per_device_total_bytes")
+        fits = "yes" if (per_dev or 0) < 16e9 else "**no**"
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{r.get('step_kind', '?')} | {r.get('compile_s', '?')}s | "
+                   f"{fmt_bytes(per_dev)} | {fits} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="16x16"):
+    out = ["| arch | shape | t_compute | t_memory | t_collective | bound |"
+           " MODEL/HLO | roofline_frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(t['t_compute'])} | "
+            f"{fmt_t(t['t_memory'])} | {fmt_t(t['t_collective'])} | "
+            f"{t['dominant']} | {r.get('useful_flops_ratio', 0):.3f} | "
+            f"{r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(out)
+
+
+def summarise(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] == "error"]
+    lines = [f"{len(ok)} compiled OK, {len(sk)} documented skips, "
+             f"{len(er)} errors (of {len(recs)} runs)."]
+    from collections import Counter
+    dom = Counter(r["roofline"]["dominant"] for r in ok)
+    lines.append(f"Dominant terms: {dict(dom)}.")
+    worst = sorted((r for r in ok if r["mesh"] == "16x16"),
+                   key=lambda r: r.get("roofline_fraction", 0))[:5]
+    lines.append("Lowest roofline fractions (hillclimb candidates): "
+                 + ", ".join(f"{r['arch']}x{r['shape']}"
+                             f"={r.get('roofline_fraction', 0):.3f}"
+                             for r in worst))
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.json"
+    with open(path) as f:
+        recs = json.load(f)
+    print("### Summary\n")
+    print(summarise(recs))
+    print("\n### Dry-run (memory analysis, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline — single pod 16x16 (probe-corrected)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n### Roofline — two pods 2x16x16\n")
+    print(roofline_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

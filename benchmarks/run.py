@@ -1,0 +1,39 @@
+# One function per paper table/figure.  Prints ``name,us_per_call,derived``
+# CSV (one row per measurement) and exits non-zero on any module failure.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_latency_error, fig3_pareto,
+                            mc_kernel_bench, solver_bench,
+                            table2_platforms, table3_cost_model,
+                            table4_tradeoff)
+    modules = [
+        ("table2", table2_platforms),
+        ("table3", table3_cost_model),
+        ("table4", table4_tradeoff),
+        ("fig2", fig2_latency_error),
+        ("fig3", fig3_pareto),
+        ("solver", solver_bench),
+        ("mc_kernel", mc_kernel_bench),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,error")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

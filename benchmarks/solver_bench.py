@@ -1,0 +1,47 @@
+"""Solver micro-benchmarks (beyond-paper): JAX IPM node-LP throughput vs
+HiGHS, and B&B end-to-end, across problem scales."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, experiment_problem, timeit
+from repro.core import lp, milp
+
+
+def run() -> list:
+    rows = []
+    for mu, tau in ((4, 8), (8, 32), (16, 128)):
+        fitted, *_ = experiment_problem(tau, mu, seed=5)
+        node = fitted.node_lp(cost_cap=float(
+            fitted.single_platform_cost().min() * 2))
+        us_jax = timeit(lambda: lp.solve_node_lp(node).x.block_until_ready(),
+                        repeats=3, warmup=1)
+        us_hi = timeit(lambda: lp.scipy_reference_lp(
+            node.c, node.a_eq, node.b_eq, node.g, node.h, node.lb, node.ub),
+            repeats=3, warmup=0)
+        sol = lp.solve_node_lp(node)
+        rows.append((f"solver.node_lp.{mu}x{tau}.jax_ipm", us_jax,
+                     f"iters={int(sol.iters)};converged={bool(sol.converged)}"))
+        rows.append((f"solver.node_lp.{mu}x{tau}.highs", us_hi, ""))
+    # vmapped epsilon-grid LP relaxation sweep (one IPM call, 8 budgets)
+    fitted8, *_ = experiment_problem(16, 8, seed=7)
+    import numpy as np
+    from repro.core import pareto as par
+    caps = np.linspace(float(fitted8.single_platform_cost().min()),
+                       float(fitted8.single_platform_cost().min()) * 4, 8)
+    us_sweep = timeit(lambda: par.relaxation_frontier(fitted8, caps)[1],
+                      repeats=2, warmup=1)
+    rows.append(("solver.vmapped_eps_sweep.8x16x8caps", us_sweep,
+                 f"us_per_cap={us_sweep / len(caps):.0f}"))
+    # B&B end-to-end at medium scale
+    fitted, *_ = experiment_problem(32, 8, seed=6)
+    cap = float(fitted.single_platform_cost().min() * 2)
+    t0 = time.perf_counter()
+    r = milp.solve_bnb(fitted, cap, node_limit=300, time_limit_s=60)
+    wall = time.perf_counter() - t0
+    rows.append(("solver.bnb.8x32", wall * 1e6,
+                 f"nodes={r.nodes};nodes_per_s={r.nodes / max(wall, 1e-9):.1f};"
+                 f"status={r.status};gap={r.gap:.4f}"))
+    return rows

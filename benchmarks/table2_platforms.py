@@ -1,0 +1,18 @@
+"""Paper Table II: per-platform application performance on the workload
+(single-platform makespan + billed cost for all 128 tasks)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, experiment_problem, timeit
+
+
+def run() -> list:
+    fitted, true, plats, tasks = experiment_problem()
+    rows: list = []
+    lat = true.single_platform_latency()
+    cost = true.single_platform_cost()
+    for i, p in enumerate(plats):
+        rows.append((f"table2.{p.name}", 0.0,
+                     f"kind={p.kind};gflops={p.app_gflops:.1f};"
+                     f"makespan_s={lat[i]:.0f};cost_usd={cost[i]:.2f};"
+                     f"rate={p.rate_per_hour:.3f}"))
+    return rows

@@ -1,0 +1,5 @@
+"""repro: "Seeing Shapes in Clouds" (Inggs et al., 2015) — MILP
+task-to-platform allocation for heterogeneous IaaS, as a production
+multi-pod JAX framework.  See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,25 @@
+"""Assigned architecture configs (public-literature parameters; see each
+file for the source tag) + the paper's own MC-pricing workload config."""
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                SUBQUADRATIC, cell_is_supported)
+from repro.configs.granite_34b import CONFIG as granite_34b
+from repro.configs.gemma3_1b import CONFIG as gemma3_1b
+from repro.configs.qwen1_5_4b import CONFIG as qwen1_5_4b
+from repro.configs.internlm2_1_8b import CONFIG as internlm2_1_8b
+from repro.configs.mamba2_130m import CONFIG as mamba2_130m
+from repro.configs.whisper_tiny import CONFIG as whisper_tiny
+from repro.configs.llama4_maverick import CONFIG as llama4_maverick
+from repro.configs.kimi_k2 import CONFIG as kimi_k2
+from repro.configs.zamba2_7b import CONFIG as zamba2_7b
+from repro.configs.qwen2_vl_7b import CONFIG as qwen2_vl_7b
+
+ARCHS = {c.name: c for c in [
+    granite_34b, gemma3_1b, qwen1_5_4b, internlm2_1_8b, mamba2_130m,
+    whisper_tiny, llama4_maverick, kimi_k2, zamba2_7b, qwen2_vl_7b,
+]}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,156 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` schema covers all 10 assigned architecture families;
+family-specific fields default to "off".  ``ShapeConfig`` enumerates the
+assigned input-shape set.  Reduced configs for CPU smoke tests come from
+``ModelConfig.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | ssm | moe | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # attention flavour
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    window: int = 0                # sliding-window size for local layers
+    local_per_global: int = 0      # e.g. 5 -> pattern [5 local, 1 global]
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (pairs per dim)
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    first_k_dense: int = 0         # leading dense layers (kimi-k2)
+    dense_d_ff: int = 0            # d_ff of those dense layers
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (zamba2): one SHARED attention block applied every k ssm blocks
+    attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # frames after the (stubbed) conv frontend
+
+    # vlm: patch embeddings provided by input_specs; text+vision unified seq
+
+    # numerics
+    dtype: str = "bfloat16"        # activation/param compute dtype
+    logits_softcap: float = 0.0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:      # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Exact embedding+blocks count via the param tree."""
+        from repro.models import registry
+        from repro.models.params import n_params
+        return n_params(registry.build_model(self).param_defs())
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: routed subset only)."""
+        if not self.is_moe:
+            return self.param_count()
+        from repro.models import registry
+        from repro.models.params import n_params
+        total = self.param_count()
+        expert_p = 3 * self.d_model * self.d_ff    # swiglu per expert
+        moe_layers = self.n_layers - self.first_k_dense
+        inactive = (self.n_experts - self.experts_per_token)
+        return total - moe_layers * inactive * expert_p
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 4 if self.attn_every == 0 else 2 * max(self.attn_every, 1)),
+            d_model=256,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            d_ff=512,
+            vocab=512,
+            head_dim=64,
+            n_experts=min(self.n_experts, 8) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.experts_per_token else 0,
+            first_k_dense=min(self.first_k_dense, 1),
+            dense_d_ff=512 if self.dense_d_ff else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=32 if self.ssm_state else 256,
+            window=min(self.window, 64) if self.window else 0,
+            mrope_sections=(8, 12, 12) if self.mrope_sections else (),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 64) if self.encoder_seq else 0,
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+    def reduced(self) -> "ShapeConfig":
+        return dataclasses.replace(self, name=self.name + "-smoke",
+                                   seq_len=min(self.seq_len, 64),
+                                   global_batch=min(self.global_batch, 2))
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic attention path)
+SUBQUADRATIC = ("gemma3-1b", "mamba2-130m", "zamba2-7b")
+
+
+def cell_is_supported(arch_name: str, family: str, shape: ShapeConfig
+                      ) -> Tuple[bool, str]:
+    if shape.name.startswith("long_") and arch_name not in SUBQUADRATIC:
+        return False, "long_500k requires sub-quadratic attention (DESIGN.md §5)"
+    return True, ""

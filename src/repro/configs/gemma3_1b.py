@@ -1,0 +1,11 @@
+"""gemma3-1b [dense] — 5:1 local:global sliding window, 128k context
+[hf:google/gemma-3-1b-pt; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1,
+    d_ff=6912, vocab=262_144, head_dim=256,
+    rope_theta=1_000_000.0,
+    window=512, local_per_global=5,      # pattern: 5 local then 1 global
+)

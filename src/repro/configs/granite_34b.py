@@ -1,0 +1,9 @@
+"""granite-34b [dense] — llama-arch code model [arXiv:2405.04324; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,   # MQA (GQA kv=1)
+    d_ff=24576, vocab=49152, head_dim=128,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,15 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE: 384 experts top-8 +
+1 shared expert, first layer dense [arXiv:2501.kimi2; unverified].
+
+head_dim = 7168/64 = 112 (the public config uses MLA; the assigned pool
+entry specifies GQA kv=8, which we follow)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab=163_840, head_dim=112,
+    rope_theta=50_000.0,
+    n_experts=384, experts_per_token=8, n_shared_experts=1,
+    first_k_dense=1, dense_d_ff=16_384,
+)

@@ -1,0 +1,11 @@
+"""llama4-maverick-400b-a17b [moe] — 128 routed experts top-1 + shared
+expert, early fusion [hf:meta-llama/Llama-4; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202_048, head_dim=128,
+    rope_theta=500_000.0,
+    n_experts=128, experts_per_token=1, n_shared_experts=1,
+)

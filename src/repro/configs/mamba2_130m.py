@@ -1,0 +1,11 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free
+[arXiv:2405.21060; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=1, n_kv_heads=1,   # attn-free
+    d_ff=0, vocab=50_280,
+    head_dim=64,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+)

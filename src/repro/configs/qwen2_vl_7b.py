@@ -1,0 +1,11 @@
+"""qwen2-vl-7b [vlm] — backbone only; patch embeddings + M-RoPE position
+ids provided by input_specs() (frontend STUB) [arXiv:2409.12191; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18_944, vocab=152_064, head_dim=128,
+    rope_theta=1_000_000.0, qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+)

@@ -1,0 +1,11 @@
+"""whisper-tiny [audio] — enc-dec; conv/audio frontend is a STUB:
+input_specs() provides precomputed frame embeddings (B, 1500, 384)
+[arXiv:2212.04356; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51_865, head_dim=64,
+    encoder_layers=4, encoder_seq=1500,
+)

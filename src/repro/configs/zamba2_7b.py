@@ -1,0 +1,12 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + SHARED attention block applied
+every 6 ssm blocks (weight reuse; per-occurrence LoRA omitted, noted in
+DESIGN.md) [arXiv:2411.15242; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14_336, vocab=32_000, head_dim=112,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    attn_every=6,
+)

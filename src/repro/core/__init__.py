@@ -1,0 +1,12 @@
+"""Core contribution: MILP task-to-platform allocation (paper Eq. 1-4).
+
+The interior-point LP solver and the B&B bounding logic need double
+precision; the LM substrate elsewhere in the package uses explicit
+bf16/f32 dtypes throughout, so enabling x64 here is safe.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import fitting, models  # noqa: E402,F401
+from repro.core.problem import AllocationProblem  # noqa: E402,F401

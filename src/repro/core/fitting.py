@@ -1,0 +1,53 @@
+"""Weighted least squares fitting of the latency model coefficients (paper III.A).
+
+The paper benchmarks every (task, platform) pair for a short budget and fits
+``L(N) = beta*N + gamma`` by weighted least squares.  We implement the WLS in
+closed form in JAX and vmap it across all (task, platform) pairs at once.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wls_fit(n: jnp.ndarray, lat: jnp.ndarray, weights: jnp.ndarray | None = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fit L = beta*N + gamma by weighted least squares.
+
+    n, lat: (samples,).  weights: (samples,) or None (== uniform).
+    Returns (beta, gamma), clipped to be non-negative (the models in Eq. 3
+    require beta, gamma in R+; a tiny negative intercept from noise would
+    otherwise break the MILP's bounding assumptions).
+    """
+    n = n.astype(jnp.float64) if jax.config.jax_enable_x64 else n.astype(jnp.float32)
+    lat = lat.astype(n.dtype)
+    if weights is None:
+        weights = jnp.ones_like(n)
+    w = weights / weights.sum()
+    # Closed form for the 2-parameter weighted regression.
+    nbar = (w * n).sum()
+    lbar = (w * lat).sum()
+    cov = (w * (n - nbar) * (lat - lbar)).sum()
+    var = (w * (n - nbar) ** 2).sum()
+    beta = cov / jnp.maximum(var, 1e-30)
+    gamma = lbar - beta * nbar
+    return jnp.maximum(beta, 1e-12), jnp.maximum(gamma, 0.0)
+
+
+# vmap over (tau, mu, samples) benchmark tensors: fit every pair at once.
+wls_fit_all = jax.jit(
+    jax.vmap(jax.vmap(wls_fit, in_axes=(0, 0, 0)), in_axes=(0, 0, 0)))
+
+
+def inverse_variance_weights(lat_samples: jnp.ndarray, repeats: jnp.ndarray) -> jnp.ndarray:
+    """Weights for WLS: benchmark points measured with more repeats (or lower
+    observed jitter) get higher weight; paper uses weighted LSQ for exactly
+    this heteroscedasticity."""
+    return repeats / jnp.maximum(lat_samples, 1e-12)
+
+
+def relative_error(pred: jnp.ndarray, actual: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 2 metric: |pred - actual| / actual."""
+    return jnp.abs(pred - actual) / jnp.maximum(jnp.abs(actual), 1e-30)

@@ -1,0 +1,141 @@
+"""Platform catalogs: the paper's experimental cluster (Tables I-III) and
+the TPU pod-slice adaptation used by the LM-serving allocator.
+
+The paper's Table II is treated as ground truth for the platform simulator
+(`repro.pricing.simulate`): application GFLOPS fixes the per-path
+throughput, the device class fixes the setup constant gamma, and the
+quoted $/hour fixes pi.  Table III parameters feed the Eq. 2 TCO model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.models import TCOModel, SECONDS_PER_HOUR
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    provider: str
+    device: str
+    kind: str                  # cpu | gpu | fpga | tpu
+    app_gflops: float          # measured application performance (Table II)
+    rate_per_hour: float       # $/hour (pi before quantisation)
+    quantum_s: float           # billing time quantum rho, seconds
+    setup_s: float             # mean task setup overhead -> gamma scale
+    count: int = 1
+
+    @property
+    def rate_per_quantum(self) -> float:
+        return self.rate_per_hour * self.quantum_s / SECONDS_PER_HOUR
+
+
+# --------------------------------------------------------------------------
+# Paper Table II (16 platforms) + Table I time quanta.
+# FPGA boards are in-house -> Eq. 2 rates (already computed in Table II);
+# their hosts bill per-minute in our reproduction (datacentre operator
+# choice, documented).  CPU quanta follow Table I (MA=1min, GCE=10min,
+# AWS=60min); the GPU is AWS => 60 min.
+# Setup constants: FPGA bitstream configuration ~O(10s); GPU context +
+# transfer ~O(1s); CPU ~O(0.1s).  These are the gamma scales the paper
+# attributes to "communication, device configuration in the FPGA case".
+# --------------------------------------------------------------------------
+
+def paper_platforms() -> List[Platform]:
+    plats: List[Platform] = []
+    for k in range(4):
+        plats.append(Platform(f"maxeler-virtex6-{k}", "inhouse",
+                              "Xilinx Virtex 6 475T", "fpga",
+                              111.978, 0.438, 60.0, 12.0))
+    for k in range(8):
+        plats.append(Platform(f"maxeler-stratixV-{k}", "inhouse",
+                              "Altera Stratix V GSD8", "fpga",
+                              112.949, 0.442, 60.0, 12.0))
+    plats.append(Platform("altera-opencl-0", "inhouse",
+                          "Altera Stratix V GSD5", "fpga",
+                          176.871, 0.692, 60.0, 10.0))
+    plats.append(Platform("aws-gpu-0", "AWS", "Nvidia Grid GK104", "gpu",
+                          556.085, 0.650, 3600.0, 1.2))
+    plats.append(Platform("ma-cpu-0", "MA", "Intel Xeon E5-2660", "cpu",
+                          4.160, 0.480, 60.0, 0.15))
+    plats.append(Platform("gce-cpu-0", "GCE", "Intel Xeon", "cpu",
+                          6.022, 0.352, 600.0, 0.15))
+    assert len(plats) == 16
+    return plats
+
+
+# Paper Table III TCO models (verification target for Eq. 2).
+TABLE_III = {
+    "fpga": dict(model=TCOModel(device_capital_cost=5370, energy_use_w=50,
+                                capital_recovery_years=5, charged_usage=0.80,
+                                profit_margin=0.20),
+                 expected_rate=0.46, observed_rate=None),
+    "gpu": dict(model=TCOModel(device_capital_cost=3120, energy_use_w=135,
+                               capital_recovery_years=2, charged_usage=0.80,
+                               profit_margin=0.20),
+                expected_rate=0.64, observed_rate=0.65),
+    "cpu": dict(model=TCOModel(device_capital_cost=2530, energy_use_w=115,
+                               capital_recovery_years=2, charged_usage=0.90,
+                               profit_margin=0.20),
+                expected_rate=0.50, observed_rate=0.53),
+}
+
+
+# --------------------------------------------------------------------------
+# TPU pod-slice catalog (hardware adaptation, DESIGN.md §2).
+# Rates via Eq. 2: per-chip TCO model x slice size, RDP = 1 within class.
+# TPU v5e list-price public figures are roughly $1.2/chip-hour on-demand;
+# our TCO model lands in the same range (documented, not calibrated to it).
+# --------------------------------------------------------------------------
+
+TPU_V5E_CHIP_TCO = TCOModel(device_capital_cost=8000, energy_use_w=200,
+                            capital_recovery_years=3, charged_usage=0.75,
+                            profit_margin=0.35)
+# 8k$/chip amortises the host/CPU tray + ICI/OCS networking share; the
+# resulting ~$1.0/chip-hour sits just under the ~$1.2 public on-demand
+# price, as a wholesale/TCO floor should.
+
+# peak numbers used across the repo (also the roofline constants)
+TPU_V5E_PEAK_BF16_FLOPS = 197e12          # per chip
+TPU_V5E_HBM_BW = 819e9                    # bytes/s per chip
+TPU_V5E_ICI_BW = 50e9                     # bytes/s per link
+
+
+def tpu_slice_catalog() -> List[Platform]:
+    """Heterogeneous pod-slice offerings the LM allocator chooses between.
+
+    Larger slices have shorter billing quanta in this catalog (providers
+    price premium capacity with finer granularity to keep utilisation up)
+    — this is exactly the kind of non-linearity the MILP exploits.
+    """
+    chip_rate = TPU_V5E_CHIP_TCO.hourly_rate()
+    slices = [
+        ("v5e-16", 16, 600.0, 1.00),
+        ("v5e-64", 64, 300.0, 1.00),
+        ("v5e-256", 256, 60.0, 1.05),     # premium interconnect locality
+        ("v5e-512-2pod", 512, 60.0, 0.95),  # cross-pod discount (DCN hop)
+    ]
+    plats = []
+    for name, chips, quantum, premium in slices:
+        plats.append(Platform(
+            name=name, provider="tpu-iaas", device="TPU v5e", kind="tpu",
+            app_gflops=chips * TPU_V5E_PEAK_BF16_FLOPS / 1e9,
+            rate_per_hour=chips * chip_rate * premium,
+            quantum_s=quantum,
+            setup_s=45.0 + 0.05 * chips,   # program load + weight shard load
+            count=chips))
+    return plats
+
+
+def catalog_arrays(platforms: List[Platform]) -> Dict[str, np.ndarray]:
+    return dict(
+        gflops=np.array([p.app_gflops for p in platforms]),
+        rate_hour=np.array([p.rate_per_hour for p in platforms]),
+        rho=np.array([p.quantum_s for p in platforms]),
+        pi=np.array([p.rate_per_quantum for p in platforms]),
+        setup=np.array([p.setup_s for p in platforms]),
+        names=[p.name for p in platforms],
+    )

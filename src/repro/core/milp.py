@@ -1,0 +1,263 @@
+"""MILP partitioner: structure-exploiting branch & bound (primary) and
+scipy/HiGHS on the untransformed Eq. 4 (oracle / very-large-scale backend).
+
+The B&B exploits two observations about Eq. 4 (see DESIGN.md §2):
+
+* in the LP relaxation, the setup binary B appears only through
+  ``+gamma*B`` in the platform latency with the coupling ``A <= B``;
+  since gamma >= 0, any LP optimum has B = A, so free binaries can be
+  *substituted out*.  Node LPs therefore have mu*tau + mu + 1 variables
+  and ~tau + 2mu + 1 rows instead of ~tau + 2*mu*tau + mu + 1 rows.
+* the quanta integer D only enters via the budget row; its relaxation is
+  D = G_L / rho, substituted likewise and branched on only when the
+  budget row is binding at a fractional D.
+
+Node LPs are solved by the jit-compiled JAX interior-point method
+(:mod:`repro.core.lp`); shapes are identical across nodes so the solver
+compiles exactly once per problem size.  Nodes whose IPM solve does not
+converge cleanly are re-solved with HiGHS (robust infeasibility
+certificates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import heuristics
+from repro.core import lp as lpmod
+from repro.core.problem import AllocationProblem
+
+_FRAC_TOL = 1e-6
+_FEAS_TOL = 1e-9
+
+
+@dataclasses.dataclass
+class MILPResult:
+    alloc: Optional[np.ndarray]
+    makespan: float
+    cost: float
+    lower_bound: float
+    status: str                  # optimal | feasible | infeasible | node_limit
+    nodes: int
+    backend: str
+    wall_s: float
+
+    @property
+    def gap(self) -> float:
+        if self.alloc is None or self.lower_bound <= 0:
+            return np.inf
+        return (self.makespan - self.lower_bound) / self.makespan
+
+
+# ---------------------------------------------------------------------------
+# Node LP solve (JAX IPM with HiGHS fallback)
+# ---------------------------------------------------------------------------
+
+def _solve_node(node, prefer_jax: bool = True):
+    """Returns (x, obj, status) with status in {ok, infeasible}."""
+    if prefer_jax:
+        sol = lpmod.solve_node_lp(node)
+        if bool(sol.converged):
+            return np.asarray(sol.x), float(sol.obj), "ok"
+    res = lpmod.scipy_reference_lp(node.c, node.a_eq, node.b_eq, node.g,
+                                   node.h, node.lb, node.ub)
+    if res.status == 2:
+        return None, np.inf, "infeasible"
+    if not res.success:
+        return None, np.inf, "infeasible"
+    return res.x, float(res.fun), "ok"
+
+
+def _round_incumbent(problem: AllocationProblem, a: np.ndarray,
+                     cost_cap: Optional[float]):
+    """Round an LP allocation to a feasible incumbent (true models)."""
+    a = np.maximum(a, 0.0)
+    a = a / np.maximum(a.sum(axis=0, keepdims=True), 1e-12)
+    a[a < 1e-9] = 0.0
+    a = a / np.maximum(a.sum(axis=0, keepdims=True), 1e-12)
+    mk, cost = heuristics.evaluate(problem, a)
+    if cost_cap is not None and cost > cost_cap * (1 + _FEAS_TOL):
+        repaired = heuristics.repair_to_budget(problem, a, cost_cap)
+        if repaired is None:
+            return None, np.inf, np.inf
+        a = repaired
+        mk, cost = heuristics.evaluate(problem, a)
+    return a, mk, cost
+
+
+# ---------------------------------------------------------------------------
+# Branch & bound
+# ---------------------------------------------------------------------------
+
+def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
+              *, node_limit: int = 2000, gap_tol: float = 1e-4,
+              time_limit_s: float = 120.0, prefer_jax: bool = True
+              ) -> MILPResult:
+    t0 = time.monotonic()
+    mu, tau = problem.mu, problem.tau
+
+    # Root incumbent from the heuristics (gives us pruning power early).
+    incumbent, inc_mk, inc_cost = None, np.inf, np.inf
+    if cost_cap is None:
+        cand = heuristics.proportional_split(problem)
+        cand_list = [cand, heuristics.min_min(problem)]
+    else:
+        cand_list = []
+        h = heuristics.best_heuristic_for_budget(problem, cost_cap)
+        if h is not None:
+            cand_list.append(h)
+    for cand in cand_list:
+        mk, cost = heuristics.evaluate(problem, cand)
+        if (cost_cap is None or cost <= cost_cap * (1 + _FEAS_TOL)) and mk < inc_mk:
+            incumbent, inc_mk, inc_cost = cand, mk, cost
+
+    counter = itertools.count()
+    root = dict(b0=np.zeros((mu, tau), bool), b1=np.zeros((mu, tau), bool),
+                d_lb=np.zeros(mu), d_ub=None)
+    heap = [(0.0, next(counter), root)]
+    best_lb_closed = np.inf   # min lb among pruned/leaf nodes
+    nodes = 0
+    status = "optimal"
+
+    while heap:
+        if nodes >= node_limit:
+            status = "node_limit"
+            break
+        if time.monotonic() - t0 > time_limit_s:
+            status = "time_limit"
+            break
+        parent_lb, _, nd = heapq.heappop(heap)
+        if parent_lb >= inc_mk * (1 - gap_tol):
+            continue
+        nodes += 1
+        node = problem.node_lp(cost_cap, nd["b0"], nd["b1"],
+                               nd["d_lb"], nd["d_ub"])
+        x, obj, st = _solve_node(node, prefer_jax)
+        if st == "infeasible":
+            continue
+        if obj >= inc_mk * (1 - gap_tol):
+            continue
+        a, d, f_l = problem.split_node_x(x)
+
+        # incumbent from this node's allocation
+        cand, mk, cost = _round_incumbent(problem, a, cost_cap)
+        if cand is not None and mk < inc_mk:
+            incumbent, inc_mk, inc_cost = cand, mk, cost
+
+        # pick a branch variable: setup binaries first, then quanta
+        free = ~(nd["b0"] | nd["b1"])
+        frac_b = np.where(free, problem.gamma * a * (1.0 - a), 0.0)
+        # only A strictly inside (0,1) matters
+        inside = (a > _FRAC_TOL) & (a < 1 - _FRAC_TOL)
+        frac_b = np.where(inside, frac_b, 0.0)
+        bi, bj = np.unravel_index(int(np.argmax(frac_b)), frac_b.shape)
+        b_score = frac_b[bi, bj]
+
+        d_frac = d - np.floor(d)
+        d_score_vec = problem.pi * np.minimum(d_frac, 1 - d_frac)
+        d_i = int(np.argmax(d_score_vec))
+        d_score = d_score_vec[d_i] if cost_cap is not None else 0.0
+
+        if b_score <= _FRAC_TOL and d_score <= _FRAC_TOL:
+            # relaxation is integral-enough: node is solved exactly
+            continue
+
+        if b_score >= d_score:
+            for val in (1, 0):
+                child = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                             d_lb=nd["d_lb"].copy(),
+                             d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
+                (child["b1"] if val else child["b0"])[bi, bj] = True
+                heapq.heappush(heap, (obj, next(counter), child))
+        else:
+            lo = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                      d_lb=nd["d_lb"].copy(),
+                      d_ub=(problem.d_max() if nd["d_ub"] is None
+                            else nd["d_ub"].copy()))
+            lo["d_ub"][d_i] = np.floor(d[d_i])
+            hi = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                      d_lb=nd["d_lb"].copy(),
+                      d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
+            hi["d_lb"][d_i] = np.ceil(d[d_i])
+            heapq.heappush(heap, (obj, next(counter), lo))
+            heapq.heappush(heap, (obj, next(counter), hi))
+
+    open_lb = min((lb for lb, _, _ in heap), default=np.inf)
+    lower = min(open_lb, inc_mk)
+    if incumbent is None:
+        return MILPResult(None, np.inf, np.inf, lower,
+                          "infeasible" if status == "optimal" else status,
+                          nodes, "bnb-jax", time.monotonic() - t0)
+    if status == "optimal" and open_lb >= inc_mk * (1 - gap_tol):
+        st = "optimal"
+    elif status == "optimal":
+        st = "optimal"
+    else:
+        st = status
+    return MILPResult(incumbent, inc_mk, inc_cost, lower, st, nodes,
+                      "bnb-jax", time.monotonic() - t0)
+
+
+# ---------------------------------------------------------------------------
+# HiGHS backend on untransformed Eq. 4
+# ---------------------------------------------------------------------------
+
+def solve_highs(problem: AllocationProblem, cost_cap: Optional[float] = None,
+                *, time_limit_s: float = 120.0, mip_rel_gap: float = 1e-4
+                ) -> MILPResult:
+    from scipy.optimize import LinearConstraint, milp
+    from scipy.sparse import csr_matrix
+
+    t0 = time.monotonic()
+    arrs = problem.full_milp_arrays(cost_cap)
+    constraints = [
+        LinearConstraint(csr_matrix(arrs["a_ub"]), -np.inf, arrs["b_ub"]),
+        LinearConstraint(csr_matrix(arrs["a_eq"]), arrs["b_eq"], arrs["b_eq"]),
+    ]
+    from scipy.optimize import Bounds
+    res = milp(c=arrs["c"], constraints=constraints,
+               integrality=arrs["integrality"],
+               bounds=Bounds(arrs["lb"], arrs["ub"]),
+               options=dict(time_limit=time_limit_s, mip_rel_gap=mip_rel_gap))
+    wall = time.monotonic() - t0
+    if res.status == 2:
+        return MILPResult(None, np.inf, np.inf, np.inf, "infeasible", 0,
+                          "highs", wall)
+    if res.x is None:
+        # time limit with no incumbent — NOT proven infeasible.  The
+        # problem always admits the best-heuristic construction whenever
+        # the budget does, so fall back to it (paper step 2: at C_L both
+        # methods coincide on the cheapest platform anyway).
+        if cost_cap is not None:
+            h = heuristics.best_heuristic_for_budget(problem, cost_cap)
+        else:
+            h = heuristics.proportional_split(problem)
+        if h is None:
+            return MILPResult(None, np.inf, np.inf, np.inf, "infeasible",
+                              0, "highs", wall)
+        mk, cost = heuristics.evaluate(problem, h)
+        return MILPResult(h, mk, cost, 0.0, "time_limit_heuristic", 0,
+                          "highs", wall)
+    idx = arrs["idx"]
+    a = res.x[idx["a"]:idx["b"]].reshape(problem.mu, problem.tau)
+    a = np.maximum(a, 0.0)
+    a = a / np.maximum(a.sum(axis=0, keepdims=True), 1e-12)
+    mk, cost = heuristics.evaluate(problem, a)
+    lb = res.mip_dual_bound if res.mip_dual_bound is not None else mk
+    status = "optimal" if res.status == 0 else "feasible"
+    return MILPResult(a, mk, cost, float(lb), status,
+                      int(getattr(res, "mip_node_count", 0) or 0), "highs", wall)
+
+
+def solve(problem: AllocationProblem, cost_cap: Optional[float] = None,
+          backend: str = "bnb", **kw) -> MILPResult:
+    if backend == "bnb":
+        return solve_bnb(problem, cost_cap, **kw)
+    if backend == "highs":
+        return solve_highs(problem, cost_cap, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

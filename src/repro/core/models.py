@@ -1,0 +1,150 @@
+"""Latency and cost models from the paper (Eq. 1) and IaaS rate derivation (Eq. 2).
+
+All model evaluation is JAX-native (jit/vmap friendly); the same functions are
+used by the fitting code, the partitioners, and the benchmark harness.
+
+Notation (paper section III.A):
+    L(N)    = beta * N + gamma                 -- per (task, platform) latency
+    C(L)    = ceil(L / rho) * pi               -- quantised IaaS billing
+    pi      = DBR * RDP                        -- Eq. 2, for unpriced devices
+    DBR     = (TCO + PM) * rho / P             -- device base rate
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SECONDS_PER_HOUR = 3600.0
+SECONDS_PER_YEAR = 365.0 * 24.0 * SECONDS_PER_HOUR
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1a — linear latency model
+# ---------------------------------------------------------------------------
+
+def latency(n: jnp.ndarray, beta: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """L(N) = beta * N + gamma.  Broadcasts over any matching shapes."""
+    return beta * n + gamma
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1b — quantised cost model
+# ---------------------------------------------------------------------------
+
+def cost_of_latency(lat_s: jnp.ndarray, rho_s: jnp.ndarray, pi_rate: jnp.ndarray) -> jnp.ndarray:
+    """C(L) = ceil(L / rho) * pi.
+
+    ``lat_s`` seconds, ``rho_s`` billing quantum in seconds, ``pi_rate`` is the
+    price per *quantum* (i.e. hourly rate already scaled by rho/3600 upstream,
+    see :func:`quantum_rate`).  Zero latency bills zero quanta.
+    """
+    quanta = jnp.ceil(lat_s / rho_s)
+    return quanta * pi_rate
+
+
+def quantum_rate(hourly_rate: jnp.ndarray, rho_s: jnp.ndarray) -> jnp.ndarray:
+    """Convert $/hour into $/time-quantum."""
+    return hourly_rate * (rho_s / SECONDS_PER_HOUR)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — rate derivation for devices without market prices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TCOModel:
+    """Simple Uptime-Institute style datacentre TCO model (paper Table III).
+
+    Everything is per-device unless noted.  ``energy_cost_kwh`` and the
+    facility overheads fold the datacentre opex into a per-device figure.
+    """
+    device_capital_cost: float          # $ per device
+    energy_use_w: float                 # device draw, watts
+    capital_recovery_years: float       # amortisation horizon
+    charged_usage: float                # fraction of wall-time billed
+    profit_margin: float                # e.g. 0.20
+    energy_cost_kwh: float = 0.10       # $/kWh (2015-ish industrial)
+    pue: float = 1.7                    # facility power usage effectiveness
+    facility_capex_per_w: float = 9.0   # $/W facility build-out (Uptime)
+    facility_recovery_years: float = 15.0
+    opex_staff_factor: float = 0.35     # staff+maintenance as fraction of device capex/yr
+    site_overhead_per_device: float = 1000.0
+    # ^ per-device share of the non-IT site costs in the Uptime simple
+    #   model (land, shell, security, network, G&A): a ~5000-device
+    #   datacentre carries $4-6M/yr of such costs.
+
+    def annual_tco(self) -> float:
+        """Annual total cost of ownership for one device, $/year."""
+        device_capex = self.device_capital_cost / self.capital_recovery_years
+        energy = (self.energy_use_w * self.pue / 1000.0) * 8760.0 * self.energy_cost_kwh
+        facility = (self.energy_use_w * self.facility_capex_per_w
+                    / self.facility_recovery_years)
+        staff = self.opex_staff_factor * device_capex
+        return (device_capex + energy + facility + staff
+                + self.site_overhead_per_device)
+
+    def device_base_rate(self, rho_s: float) -> float:
+        """DBR = (TCO + PM) * rho / P, $ per time-quantum (Eq. 2)."""
+        tco = self.annual_tco()
+        with_margin = tco * (1.0 + self.profit_margin)
+        # Only charged_usage of wall time is billed, so the billed hours must
+        # recover the full year's cost.
+        billed_fraction = max(self.charged_usage, 1e-9)
+        return with_margin * (rho_s / SECONDS_PER_YEAR) / billed_fraction
+
+    def hourly_rate(self, rdp: float = 1.0) -> float:
+        """pi = DBR * RDP expressed per hour."""
+        return self.device_base_rate(SECONDS_PER_HOUR) * rdp
+
+
+def relative_device_performance(app_gflops: np.ndarray) -> np.ndarray:
+    """RDP: performance of each device relative to the mean of its class."""
+    app_gflops = np.asarray(app_gflops, dtype=np.float64)
+    return app_gflops / app_gflops.mean()
+
+
+# ---------------------------------------------------------------------------
+# Workload-level reductions (paper Eq. 3) as pure JAX — reused by
+# heuristics, the LP/B&B bounding code, and verification of solver output.
+# ---------------------------------------------------------------------------
+
+def platform_latencies(alloc: jnp.ndarray,
+                       beta_n: jnp.ndarray,
+                       gamma: jnp.ndarray,
+                       setup: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Vector G_L(A): per-platform latency for allocation ``alloc``.
+
+    alloc, beta_n, gamma: (mu, tau).  ``beta_n`` is the elementwise product
+    beta∘N (seconds for the *whole* task on that platform).  ``setup`` is the
+    ceil(A) indicator; if None it is derived as A > 0 (the true
+    non-linearity).
+    """
+    if setup is None:
+        setup = (alloc > 0).astype(alloc.dtype)
+    per_task = beta_n * alloc + gamma * setup
+    return per_task.sum(axis=1)
+
+
+def makespan(alloc: jnp.ndarray, beta_n: jnp.ndarray, gamma: jnp.ndarray,
+             setup: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """F_L = max_i G_L,i(A)."""
+    return platform_latencies(alloc, beta_n, gamma, setup).max()
+
+
+def total_cost(alloc: jnp.ndarray, beta_n: jnp.ndarray, gamma: jnp.ndarray,
+               rho: jnp.ndarray, pi_quantum: jnp.ndarray,
+               setup: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """F_C = sum_i ceil(G_L,i / rho_i) * pi_i   (pi per quantum)."""
+    g_l = platform_latencies(alloc, beta_n, gamma, setup)
+    quanta = jnp.ceil(g_l / rho)
+    return (quanta * pi_quantum).sum()
+
+
+def evaluate_allocation(alloc, beta_n, gamma, rho, pi_quantum):
+    """(makespan_seconds, cost_dollars) for a concrete allocation matrix."""
+    g_l = platform_latencies(alloc, beta_n, gamma)
+    return g_l.max(), (jnp.ceil(g_l / rho) * pi_quantum).sum()

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots + pure-jnp oracles.
+
+mc_pricing: the paper's Monte Carlo workload (Philox4x32 in-kernel RNG,
+(8,128) VMEM path tiles).  flash_attention: blocked-softmax attention
+(GQA/causal/sliding-window).  Validated with interpret=True on CPU;
+`ops.py` is the jit'd public surface, `ref.py` the oracles.
+"""

@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+TPU-native tiling: Q/K/V tiles are (block_q x head_dim) / (block_k x
+head_dim) MXU-aligned (multiples of 128 on the contracting dims), the
+running max / normaliser / accumulator live in VMEM scratch across the
+innermost kv grid axis, and only the final normalised tile is written to
+HBM — the classic O(L) memory flash schedule restated with BlockSpecs.
+
+Supports GQA (q heads grouped onto kv heads via the K/V index_map),
+causal masking with end-alignment (decode: Lq < Lk attends to the cache
+suffix) and an optional sliding window (gemma3-style local layers).
+
+grid = (batch * q_heads, q_blocks, kv_blocks)   [kv innermost]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_k: int, lq: int, lk: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = (qi * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            + (lk - lq))
+    kpos = (ki * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = kpos < lk
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                 # (bq,)
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    # guard fully-masked rows (exp(-inf - -inf))
+    m_safe = jnp.where(m_cur <= _NEG_INF * 0.5, 0.0, m_cur)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev <= _NEG_INF * 0.5, 0.0,
+                      jnp.exp(m_prev - m_safe))
+    l_cur = alpha * l_prev + p.sum(axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D).  Returns (B, Hq, Lq, D)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = d ** -0.5
+
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    n_q = pl.cdiv(lq, block_q)
+    n_k = pl.cdiv(lk, block_k)
+
+    qf = q.reshape(b * hq, lq, d)
+    kf = k.reshape(b * hkv, lk, d)
+    vf = v.reshape(b * hkv, lk, d)
+
+    def kv_index(bh, qi, ki):
+        batch = bh // hq
+        kvh = (bh % hq) // group
+        return (batch * hkv + kvh, ki, 0)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, lq=lq, lk=lk, n_kv_blocks=n_k)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, lq, d)

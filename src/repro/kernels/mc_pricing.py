@@ -1,0 +1,123 @@
+"""Pallas TPU kernel for Monte Carlo GBM option pricing.
+
+TPU-native design (DESIGN.md §2): paths are tiled into (8, 128) VMEM
+blocks (sublane x lane aligned); randomness comes from an in-kernel
+Philox4x32-10 keyed on (path, step, task, seed) so no RNG state ever
+touches HBM; each grid cell reduces its 1024 paths to two scalars
+(payoff sum, payoff sum-of-squares) so HBM traffic is O(grid) not
+O(paths).  Elementwise GBM work maps to the VPU; there is no matmul so
+the MXU is intentionally idle — this kernel is bandwidth-trivial and
+compute(VPU)-bound, like the paper's "compute bound ... random number
+generation accounting for the bulk" workload.
+
+grid = (tasks, path_blocks); one pallas_call per (kind, steps) group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import philox
+from repro.pricing.options import KIND_IDS, N_PARAM_COLS
+
+BLOCK_ROWS = 8
+BLOCK_LANES = 128
+BLOCK_PATHS = BLOCK_ROWS * BLOCK_LANES
+
+
+def _payoff(kind_id: int, log_s, asian_acc, knocked, strike, steps):
+    s_t = jnp.exp(log_s)
+    if kind_id == KIND_IDS["european_call"]:
+        return jnp.maximum(s_t - strike, 0.0)
+    if kind_id == KIND_IDS["european_put"]:
+        return jnp.maximum(strike - s_t, 0.0)
+    if kind_id == KIND_IDS["asian_call"]:
+        avg = asian_acc * np.float32(1.0 / steps)
+        return jnp.maximum(avg - strike, 0.0)
+    if kind_id == KIND_IDS["barrier_up_out_call"]:
+        return jnp.where(knocked, np.float32(0.0),
+                         jnp.maximum(s_t - strike, 0.0))
+    raise ValueError(kind_id)
+
+
+def _mc_kernel(params_ref, sum_ref, sumsq_ref, *, kind_id: int, steps: int,
+               seed: int):
+    task = pl.program_id(0)
+    blk = pl.program_id(1)
+
+    s0 = params_ref[0, 0]
+    strike = params_ref[0, 1]
+    rate = params_ref[0, 2]
+    sigma = params_ref[0, 3]
+    maturity = params_ref[0, 4]
+    barrier = params_ref[0, 5]
+    n_paths = params_ref[0, 6]
+
+    dt = maturity * np.float32(1.0 / steps)
+    drift = (rate - np.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+
+    row = jax.lax.broadcasted_iota(jnp.uint32, (BLOCK_ROWS, BLOCK_LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (BLOCK_ROWS, BLOCK_LANES), 1)
+    path = (jnp.uint32(blk) * np.uint32(BLOCK_PATHS)
+            + row * jnp.uint32(BLOCK_LANES) + col)
+
+    log_s = jnp.full((BLOCK_ROWS, BLOCK_LANES), jnp.log(s0), jnp.float32)
+    asian = jnp.zeros((BLOCK_ROWS, BLOCK_LANES), jnp.float32)
+    knocked = jnp.zeros((BLOCK_ROWS, BLOCK_LANES), jnp.bool_)
+
+    def step_fn(i, carry):
+        log_s, asian, knocked = carry
+        z, _ = philox.normal_pair(path, jnp.uint32(i),
+                                  jnp.uint32(task), np.uint32(seed),
+                                  np.uint32(0xF3), np.uint32(0xC10D))
+        log_s = log_s + drift + vol * z
+        s = jnp.exp(log_s)
+        asian = asian + s
+        knocked = knocked | (s >= barrier)
+        return log_s, asian, knocked
+
+    log_s, asian, knocked = jax.lax.fori_loop(
+        0, steps, step_fn, (log_s, asian, knocked))
+
+    pay = _payoff(kind_id, log_s, asian, knocked, strike, steps)
+    pay = pay * jnp.exp(-rate * maturity)
+    live = path.astype(jnp.float32) < n_paths
+    pay = jnp.where(live, pay, 0.0)
+    sum_ref[0, 0] = pay.sum()
+    sumsq_ref[0, 0] = (pay * pay).sum()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind_id", "steps", "n_blocks", "seed",
+                                    "interpret"))
+def mc_price_sums(params: jnp.ndarray, *, kind_id: int, steps: int,
+                  n_blocks: int, seed: int = 0, interpret: bool = True):
+    """Partial payoff sums for a group of tasks sharing (kind, steps).
+
+    params: (tasks, N_PARAM_COLS) float32 (see options.PARAM_COLS).
+    Returns (sum, sumsq): each (tasks,) float32, already reduced over
+    blocks.
+    """
+    tasks = params.shape[0]
+    assert params.shape[1] == N_PARAM_COLS
+    kern = functools.partial(_mc_kernel, kind_id=kind_id, steps=steps,
+                             seed=seed)
+    out_shape = [
+        jax.ShapeDtypeStruct((tasks, n_blocks), jnp.float32),
+        jax.ShapeDtypeStruct((tasks, n_blocks), jnp.float32),
+    ]
+    sums, sumsqs = pl.pallas_call(
+        kern,
+        grid=(tasks, n_blocks),
+        in_specs=[pl.BlockSpec((1, N_PARAM_COLS), lambda t, b: (t, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda t, b: (t, b)),
+                   pl.BlockSpec((1, 1), lambda t, b: (t, b))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(params)
+    return sums.sum(axis=1), sumsqs.sum(axis=1)

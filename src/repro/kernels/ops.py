@@ -1,0 +1,52 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``use_pallas`` defaults to interpret-mode Pallas on CPU (validating the
+kernel path) and compiled Pallas on TPU; callers that want the pure-XLA
+path (e.g. the dry-run lowering, where cost_analysis of the XLA schedule
+is the roofline source) pass ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mc_pricing as _mc
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mc_price(params: jnp.ndarray, *, kind_id: int, steps: int,
+             n_blocks: int, seed: int = 0, use_pallas: bool = True
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(mean, stderr) per task for one (kind, steps) group."""
+    if use_pallas:
+        sums, sumsqs = _mc.mc_price_sums(
+            params, kind_id=kind_id, steps=steps, n_blocks=n_blocks,
+            seed=seed, interpret=not _on_tpu())
+    else:
+        sums, sumsqs = _ref.mc_price_sums_ref(
+            params, kind_id=kind_id, steps=steps, n_blocks=n_blocks,
+            seed=seed)
+    n = params[:, 6]
+    mean = sums / n
+    var = jnp.maximum(sumsqs / n - mean * mean, 0.0)
+    stderr = jnp.sqrt(var / n)
+    return mean, stderr
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_pallas: bool = False, block_q: int = _fa.DEFAULT_BLOCK_Q,
+              block_k: int = _fa.DEFAULT_BLOCK_K):
+    """Multi-head GQA attention; Pallas flash kernel or XLA reference."""
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The MC oracle reuses the very same Philox functions on full arrays with
+identical counters, so every per-path payoff is bit-identical to the
+kernel's; only the final float32 reduction order may differ (XLA is free
+to reassociate), so kernel-vs-ref agreement is ~1e-7 relative rather
+than a purely statistical MC tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import philox
+from repro.kernels.mc_pricing import BLOCK_PATHS
+from repro.pricing.options import KIND_IDS, N_PARAM_COLS
+
+
+@functools.partial(jax.jit, static_argnames=("kind_id", "steps", "n_blocks",
+                                              "seed"))
+def mc_price_sums_ref(params: jnp.ndarray, *, kind_id: int, steps: int,
+                      n_blocks: int, seed: int = 0):
+    """Oracle for kernels.mc_pricing.mc_price_sums (identical RNG stream)."""
+    tasks = params.shape[0]
+    n_padded = n_blocks * BLOCK_PATHS
+    path = jnp.arange(n_padded, dtype=jnp.uint32)[None, :]      # (1, P)
+    task_ids = jnp.arange(tasks, dtype=jnp.uint32)[:, None]     # (T, 1)
+
+    s0 = params[:, 0:1]
+    strike = params[:, 1:2]
+    rate = params[:, 2:3]
+    sigma = params[:, 3:4]
+    maturity = params[:, 4:5]
+    barrier = params[:, 5:6]
+    n_paths = params[:, 6:7]
+
+    dt = maturity * np.float32(1.0 / steps)
+    drift = (rate - np.float32(0.5) * sigma * sigma) * dt
+    vol = sigma * jnp.sqrt(dt)
+
+    log_s = jnp.broadcast_to(jnp.log(s0), (tasks, n_padded))
+    asian = jnp.zeros((tasks, n_padded), jnp.float32)
+    knocked = jnp.zeros((tasks, n_padded), jnp.bool_)
+    path_b = jnp.broadcast_to(path, (tasks, n_padded))
+    task_b = jnp.broadcast_to(task_ids, (tasks, n_padded))
+
+    def step_fn(i, carry):
+        log_s, asian, knocked = carry
+        z, _ = philox.normal_pair(path_b, jnp.uint32(i), task_b,
+                                  np.uint32(seed),
+                                  np.uint32(0xF3), np.uint32(0xC10D))
+        log_s = log_s + drift + vol * z
+        s = jnp.exp(log_s)
+        return log_s, asian + s, knocked | (s >= barrier)
+
+    log_s, asian, knocked = jax.lax.fori_loop(0, steps, step_fn,
+                                              (log_s, asian, knocked))
+
+    s_t = jnp.exp(log_s)
+    if kind_id == KIND_IDS["european_call"]:
+        pay = jnp.maximum(s_t - strike, 0.0)
+    elif kind_id == KIND_IDS["european_put"]:
+        pay = jnp.maximum(strike - s_t, 0.0)
+    elif kind_id == KIND_IDS["asian_call"]:
+        pay = jnp.maximum(asian * np.float32(1.0 / steps) - strike, 0.0)
+    elif kind_id == KIND_IDS["barrier_up_out_call"]:
+        pay = jnp.where(knocked, np.float32(0.0),
+                        jnp.maximum(s_t - strike, 0.0))
+    else:
+        raise ValueError(kind_id)
+    pay = pay * jnp.exp(-rate * maturity)
+    pay = jnp.where(path.astype(jnp.float32) < n_paths, pay, 0.0)
+    # reduce per-(8,128) block first, matching the kernel's tree as
+    # closely as XLA allows.
+    pay_b = pay.reshape(tasks, n_blocks, 8, 128)
+    sums = pay_b.sum(axis=(2, 3)).sum(axis=1)
+    sumsqs = (pay_b * pay_b).sum(axis=(2, 3)).sum(axis=1)
+    return sums, sumsqs
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None,
+                  window: int = 0):
+    """Reference multi-head attention with GQA, causal and optional
+    sliding-window masking.  q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D)."""
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, lq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    lk = k.shape[2]
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)   # align ends (decode)
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, lq, d).astype(q.dtype)

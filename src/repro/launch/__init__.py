@@ -1,0 +1,3 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline analysis,
+train/serve CLIs.  NOTE: dryrun must be the process entry point (it
+forces 512 host devices before jax initialises)."""

@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run driver.
+
+For every (arch x shape x mesh) cell: build abstract inputs
+(ShapeDtypeStruct, no allocation), ``jit(step).lower(...).compile()`` on
+the production mesh, print memory_analysis + cost_analysis, extract the
+roofline terms, and append the record to a JSON results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_is_supported
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as sp
+from repro.models import build_model
+from repro.runtime.serve import make_decode_step, make_prefill_step
+from repro.runtime.train import TrainConfig, make_train_step
+from repro.optim import AdamWConfig
+
+
+def probe_plan(cfg):
+    """Layer-count probes for scan-aware cost correction.
+
+    XLA's cost_analysis counts a while-loop (lax.scan) body ONCE, so the
+    full-config numbers undercount by ~n_layers.  Per-layer cost is linear
+    in layer count, so unrolled small-layer probes recover exact totals:
+
+        total = cost(base) + sum_i  mult_i * max(cost(hi_i) - cost(lo_i), 0)
+
+    The per-delta clamp keeps compile-noise on tiny decode probes from
+    driving the total negative.  Returns (base_cfg, [(hi, lo, mult), ...]).
+    """
+    import dataclasses as dc
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        fk = cfg.first_k_dense
+        c1 = dc.replace(cfg, n_layers=fk + 1)
+        c2 = dc.replace(cfg, n_layers=fk + 2)
+        return c1, [(c2, c1, cfg.n_layers - fk - 1)]
+    if fam == "ssm":
+        c1 = dc.replace(cfg, n_layers=1)
+        c2 = dc.replace(cfg, n_layers=2)
+        return c1, [(c2, c1, cfg.n_layers - 1)]
+    if fam == "hybrid":
+        ae, l = cfg.attn_every, cfg.n_layers
+        g, t = l // ae, l % ae
+        ca = dc.replace(cfg, n_layers=ae)
+        cb = dc.replace(cfg, n_layers=2 * ae)
+        deltas = [(cb, ca, g - 1)]
+        if t:
+            deltas.append((dc.replace(cfg, n_layers=ae + t), ca, 1))
+        return ca, deltas
+    if fam == "encdec":
+        ca = dc.replace(cfg, encoder_layers=1, n_layers=1)
+        cb = dc.replace(cfg, encoder_layers=2, n_layers=1)
+        cc = dc.replace(cfg, encoder_layers=1, n_layers=2)
+        return ca, [(cb, ca, cfg.encoder_layers - 1),
+                    (cc, ca, cfg.n_layers - 1)]
+    raise ValueError(fam)
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, remat: str = "none",
+               moment_dtype: str = "float32", shard_seq: bool = False,
+               unroll: bool = False, seq_parallel: bool = False,
+               loss_impl: str = "full", attn_impl: str = "naive",
+               moe_impl: str = "gathered", pin_outputs: bool = False):
+    """Returns (lowered, kind).  Raises on unsupported cells."""
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg.name, cfg.family, shape)
+    if not ok:
+        raise ValueError(f"unsupported: {why}")
+    model = build_model(cfg)
+    ctx = sp.model_context(cfg, mesh, remat=remat, unroll=unroll)
+    import dataclasses as _dc
+    ctx = _dc.replace(ctx, seq_parallel=seq_parallel, attn_impl=attn_impl,
+                      moe_impl=moe_impl)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(optim=AdamWConfig(moment_dtype=moment_dtype),
+                           loss_impl=loss_impl)
+        state = sp.abstract_train_state(cfg, mesh, tcfg)
+        batch = sp.batch_specs(cfg, shape, mesh)
+        step = make_train_step(model, ctx, tcfg)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+        return lowered, "train_step" 
+    if shape.kind == "prefill":
+        params = sp.abstract_serve_params(cfg, mesh)
+        batch = sp.batch_specs(cfg, shape, mesh)
+        batch.pop("labels", None)
+        step = make_prefill_step(model, ctx)
+        jit_kw = {}
+        if pin_outputs:
+            # GSPMD left unconstrained REPLICATES the returned KV cache
+            # (hundreds of GB/dev at 32k); pin it to the decode-side
+            # cache sharding.
+            from repro.runtime import sharding as shard_rules
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         dtype=cfg.activation_dtype))
+            cache_sh = shard_rules.cache_sharding(mesh, cache_shape, cfg)
+            tok_sh = shard_rules.batch_sharding(mesh, (shape.global_batch,))
+            jit_kw["out_shardings"] = (tok_sh, cache_sh)
+        with mesh:
+            lowered = jax.jit(step, **jit_kw).lower(params, batch)
+        return lowered, "serve_step(prefill)"
+    # decode
+    params = sp.abstract_serve_params(cfg, mesh)
+    token, cache, extras = sp.decode_specs(cfg, shape, mesh)
+    step = make_decode_step(model, ctx)
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=(2,)).lower(
+            params, token, cache, extras)
+    return lowered, "serve_step(decode)" 
+
+
+def _compile_terms(cfg, shape_name, mesh, *, remat, moment_dtype,
+                   unroll=False, **opts):
+    lowered, kind = lower_cell(cfg, shape_name, mesh, remat=remat,
+                               moment_dtype=moment_dtype, unroll=unroll,
+                               **opts)
+    compiled = lowered.compile()
+    return compiled, kind
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: str = "auto", verbose: bool = True,
+             skip_probes: bool = False, cfg_override=None,
+             seq_parallel: bool = False, loss_impl: str = "full",
+             attn_impl: str = "naive", moe_impl: str = "gathered",
+             pin_outputs: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cfg = cfg_override if cfg_override is not None else ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if remat == "auto":
+        remat = "full" if shape.kind == "train" else "none"
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               kind=shape.kind, remat=remat, status="ok")
+    t0 = time.monotonic()
+    try:
+        moment_dtype = ("bfloat16" if cfg.param_count() > 3e11 else "float32")
+        rec["moment_dtype"] = moment_dtype
+        rec["opts"] = dict(seq_parallel=seq_parallel, loss_impl=loss_impl,
+                           attn_impl=attn_impl, moe_impl=moe_impl,
+                           pin_outputs=pin_outputs)
+        opts = dict(seq_parallel=seq_parallel, loss_impl=loss_impl,
+                    attn_impl=attn_impl, moe_impl=moe_impl,
+                    pin_outputs=pin_outputs)
+        # ---- full-config compile: memory analysis + HLO sanity ----
+        compiled, kind = _compile_terms(cfg, shape_name, mesh, remat=remat,
+                                        moment_dtype=moment_dtype, **opts)
+        rec["compile_s"] = round(time.monotonic() - t0, 1)
+        mem = rf.memory_analysis_dict(compiled)
+        raw = rf.analyse(compiled, n_dev)
+        rec["step_kind"] = kind
+        rec["memory"] = mem
+        rec["roofline_raw"] = raw.as_dict()
+
+        # ---- probe compiles: scan-aware corrected roofline terms ----
+        if skip_probes:
+            terms = raw
+        else:
+            cache: dict = {}
+
+            def probe(vcfg):
+                key = (vcfg.n_layers, vcfg.encoder_layers)
+                if key not in cache:
+                    pc, _ = _compile_terms(vcfg, shape_name, mesh,
+                                           remat=remat,
+                                           moment_dtype=moment_dtype,
+                                           unroll=True, **opts)
+                    cache[key] = rf.analyse(pc, n_dev)
+                return cache[key]
+
+            base_cfg, deltas = probe_plan(cfg)
+            base = probe(base_cfg)
+            flops, nbytes = base.flops, base.hbm_bytes
+            coll = dict(base.coll_bytes)
+            for hi_cfg, lo_cfg, mult in deltas:
+                hi, lo = probe(hi_cfg), probe(lo_cfg)
+                flops += mult * max(hi.flops - lo.flops, 0.0)
+                nbytes += mult * max(hi.hbm_bytes - lo.hbm_bytes, 0.0)
+                for k in set(hi.coll_bytes) | set(lo.coll_bytes):
+                    d = max(hi.coll_bytes.get(k, 0.0)
+                            - lo.coll_bytes.get(k, 0.0), 0.0)
+                    coll[k] = coll.get(k, 0.0) + mult * d
+            terms = rf.RooflineTerms(flops, nbytes, coll, n_dev)
+        rec["roofline"] = terms.as_dict()
+
+        tokens = shape.global_batch * shape.seq_len
+        if shape.kind == "train":
+            rec["model_flops"] = rf.model_flops_train(cfg, tokens)
+        elif shape.kind == "prefill":
+            rec["model_flops"] = rf.model_flops_train(cfg, tokens) / 3.0
+        else:
+            rec["model_flops"] = rf.model_flops_decode(
+                cfg, shape.global_batch, shape.seq_len)
+        total_hlo = terms.flops * n_dev
+        rec["useful_flops_ratio"] = (rec["model_flops"] / total_hlo
+                                     if total_hlo else 0.0)
+        rec["roofline_fraction"] = (
+            terms.t_compute / terms.bound_time * rec["useful_flops_ratio"]
+            if terms.bound_time else 0.0)
+        if verbose:
+            print(f"[{arch} x {shape_name} x {rec['mesh']}] {kind} "
+                  f"remat={remat}")
+            print(f"  memory_analysis: {json.dumps(mem)}")
+            print(f"  corrected: flops/dev={terms.flops:.3e} "
+                  f"bytes/dev={terms.hbm_bytes:.3e}")
+            print(f"  roofline: compute={terms.t_compute*1e3:.2f}ms "
+                  f"memory={terms.t_memory*1e3:.2f}ms "
+                  f"collective={terms.t_collective*1e3:.2f}ms "
+                  f"-> {terms.dominant}-bound")
+            print(f"  MODEL/HLO={rec['useful_flops_ratio']:.3f} "
+                  f"roofline_frac={rec['roofline_fraction']:.3f}")
+    except ValueError as e:
+        if "unsupported" in str(e):
+            rec["status"] = "skipped"
+            rec["reason"] = str(e)
+            if verbose:
+                print(f"[{arch} x {shape_name}] SKIPPED: {e}")
+        else:
+            rec["status"] = "error"
+            rec["reason"] = traceback.format_exc()
+            if verbose:
+                print(f"[{arch} x {shape_name}] ERROR: {e}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["reason"] = traceback.format_exc()
+        if verbose:
+            print(f"[{arch} x {shape_name}] ERROR: {type(e).__name__}: {e}")
+    rec["wall_s"] = round(time.monotonic() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="auto")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--loss-impl", default="full")
+    ap.add_argument("--attn-impl", default="naive")
+    ap.add_argument("--moe-impl", default="gathered")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp, remat=args.remat,
+                           seq_parallel=args.seq_parallel,
+                           loss_impl=args.loss_impl,
+                           attn_impl=args.attn_impl,
+                           moe_impl=args.moe_impl)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1, default=float)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = len(records) - n_ok - n_skip
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(records)} cells ===")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,196 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e targets):
+
+  compute    = HLO_FLOPs   / (chips x 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes   / (chips x 819e9  B/s HBM)
+  collective = sum over collectives of bytes_moved x alg_factor
+                                / (chips x 50e9 B/s per ICI link)
+
+``cost_analysis`` on the post-SPMD module reports PER-DEVICE flops/bytes,
+so the divisors use per-chip peaks directly.  Collective bytes are parsed
+from the optimized HLO text (cost_analysis does not expose them); the
+algorithmic factor accounts for ring-schedule traffic:
+  all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n, all-to-all
+  (n-1)/n, collective-permute 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^[ \t]*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'f32[8,128]' or a tuple '(f32[...], u32[...])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_FACTORS = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_REPL_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPL_GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-category effective bytes crossing links, per device."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        ls = hlo_text.rfind("\n", 0, m.end()) + 1
+        le = hlo_text.find("\n", m.end())
+        line = hlo_text[ls:le if le >= 0 else len(hlo_text)]
+        if "-done(" in line:
+            continue     # paired with -start; avoid double count
+        nbytes = _shape_bytes(shape_str)
+        gsize = _group_size(line, n_devices)
+        if gsize <= 1:
+            continue
+        eff = nbytes * _FACTORS[op](gsize)
+        out[op] = out.get(op, 0.0) + eff
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: Dict[str, float]
+    n_devices: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes.values()) / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        """Ideal-overlap step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes, n_devices=self.n_devices,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective, dominant=self.dominant,
+                    bound_time=self.bound_time)
+
+
+def analyse(compiled, n_devices: int) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, n_devices)
+    return RooflineTerms(flops, nbytes, coll, n_devices)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6*N*D with N = active params (MoE counts routed subset)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, batch: int, context: int) -> float:
+    """Per decode step: 2*N_active per token + attention cache reads
+    (2*2*L*Hkv*S*Dh per token matmul flops ~ 4*S*d_kv... we report the
+    matmul part: 2*N + 4*S*(layers*kv_dim))."""
+    n_act = cfg.active_param_count()
+    flops = 2.0 * n_act * batch
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        layers_attn = (cfg.n_layers if cfg.family != "hybrid"
+                       else max(cfg.n_layers // max(cfg.attn_every, 1), 0))
+        kv_dim = cfg.n_kv_heads * cfg.head_dim
+        q_dim = cfg.n_heads * cfg.head_dim
+        # qk^T and pv: 2 * S * q_dim each per layer
+        flops += batch * layers_attn * 4.0 * context * q_dim
+    if cfg.family in ("ssm", "hybrid"):
+        # state update + readout: ~6 * H * P * N per token per layer
+        flops += (batch * cfg.n_layers * 6.0 * cfg.ssm_heads
+                  * cfg.ssm_head_dim * cfg.ssm_state)
+    return flops
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                      # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["per_device_total_bytes"] = live
+    return out

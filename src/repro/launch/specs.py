@@ -1,0 +1,120 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` builds weak-type-correct, sharding-annotated abstract
+values for the step function of the cell's kind — nothing is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.models.context import ModelContext
+from repro.models.params import abstract_params, param_shardings
+from repro.optim import AdamWConfig
+from repro.runtime import sharding as shard_rules
+from repro.runtime.train import TrainConfig, TrainState
+
+VLM_VISION_LEN = 1024      # stub patch count folded into the sequence
+
+
+def _sds(shape, dtype, sh=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def model_context(cfg: ModelConfig, mesh, *, remat: str = "none",
+                  use_pallas: bool = False, unroll: bool = False
+                  ) -> ModelContext:
+    return ModelContext(mesh=mesh,
+                        batch_axes=shard_rules.batch_axes(mesh),
+                        use_pallas=use_pallas, remat=remat, unroll=unroll)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """Abstract training/prefill batch for one cell."""
+    b = shape.global_batch
+    l = shape.seq_len
+    bsh = lambda shp: shard_rules.batch_sharding(mesh, shp)
+    if cfg.family == "vlm":
+        lv = min(VLM_VISION_LEN, l // 4)
+        lt = l - lv
+        total = l
+        out = {
+            "tokens": _sds((b, lt), jnp.int32, bsh((b, lt))),
+            "labels": _sds((b, total), jnp.int32, bsh((b, total))),
+            "vision_embeds": _sds((b, lv, cfg.d_model),
+                                  cfg.activation_dtype,
+                                  bsh((b, lv, cfg.d_model))),
+            "mrope_positions": _sds((3, b, total), jnp.int32,
+                                    NamedSharding(mesh, PS())),
+        }
+        return out
+    if cfg.family == "encdec":
+        return {
+            "tokens": _sds((b, l), jnp.int32, bsh((b, l))),
+            "labels": _sds((b, l), jnp.int32, bsh((b, l))),
+            "frames": _sds((b, cfg.encoder_seq, cfg.d_model),
+                           cfg.activation_dtype,
+                           bsh((b, cfg.encoder_seq, cfg.d_model))),
+        }
+    return {
+        "tokens": _sds((b, l), jnp.int32, bsh((b, l))),
+        "labels": _sds((b, l), jnp.int32, bsh((b, l))),
+    }
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh
+                 ) -> Tuple[Any, Any, Optional[Dict[str, Any]]]:
+    """(token, cache, extras) abstract values for a decode cell."""
+    b = shape.global_batch
+    s_max = shape.seq_len
+    model = build_model(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, s_max, dtype=cfg.activation_dtype))
+    shardings = shard_rules.cache_sharding(mesh, cache_shape, cfg)
+    cache = jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), cache_shape, shardings)
+    # the cache "length" scalar must be concrete-typed int32 replicated
+    token = _sds((b, 1), jnp.int32,
+                 shard_rules.batch_sharding(mesh, (b, 1)))
+    extras = None
+    if cfg.family == "vlm":
+        extras = {"mrope_positions": _sds((3, b, 1), jnp.int32,
+                                          NamedSharding(mesh, PS()))}
+    return token, cache, extras
+
+
+def abstract_train_state(cfg: ModelConfig, mesh, tcfg: TrainConfig
+                         ) -> TrainState:
+    model = build_model(cfg)
+    defs = model.param_defs()
+    # giants train FSDP x TP (2D): the data-axis parameter/optimizer
+    # redundancy of plain TP does not fit HBM past ~20B params
+    mode = "2d" if cfg.param_count() > 2e10 else "train"
+    rules = shard_rules.logical_rules(mesh, mode=mode)
+    shardings = param_shardings(defs, mesh, rules)
+    params = abstract_params(defs, dtype=jnp.float32, shardings=shardings)
+    mdt = jnp.dtype(tcfg.optim.moment_dtype)
+    moments = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt, sharding=p.sharding),
+        params)
+    from repro.optim import OptState
+    rep = NamedSharding(mesh, PS())
+    opt = OptState(moments, moments,
+                   _sds((), jnp.int32, rep))
+    return TrainState(params, opt, _sds((), jnp.int32, rep))
+
+
+def abstract_serve_params(cfg: ModelConfig, mesh):
+    model = build_model(cfg)
+    defs = model.param_defs()
+    rules = shard_rules.logical_rules(mesh, mode="serve")
+    shardings = param_shardings(defs, mesh, rules)
+    return abstract_params(defs, dtype=cfg.activation_dtype,
+                           shardings=shardings)

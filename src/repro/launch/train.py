@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+On a real TPU pod this runs under `jax.distributed` with the production
+mesh; on CPU it runs reduced configs for verification.  All the §Perf
+levers are flags, so a cluster job is e.g.:
+
+  python -m repro.launch.train --arch granite-34b --shape train_4k \
+      --seq-parallel --loss-impl chunked_vocab --remat full \
+      --ckpt-dir gs://bucket/run1 --steps 100000
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, SHAPES
+from repro.data import SyntheticPipeline
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.models import build_model
+from repro.models.params import init_params, param_shardings
+from repro.optim import AdamWConfig
+from repro.runtime import sharding as shard_rules
+from repro.runtime.train import (TrainConfig, init_train_state,
+                                 make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + tiny batch (CPU verification)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--loss-impl", default="full")
+    ap.add_argument("--attn-impl", default="naive")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = shape.reduced()
+        mesh = None
+        ctx_kw = dict(mesh=None, batch_axes=())
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        ctx_kw = dict(mesh=mesh,
+                      batch_axes=shard_rules.batch_axes(mesh))
+
+    from repro.models.context import ModelContext
+    ctx = ModelContext(remat=args.remat, seq_parallel=args.seq_parallel,
+                       attn_impl=args.attn_impl, **ctx_kw)
+
+    model = build_model(cfg)
+    tcfg = TrainConfig(optim=AdamWConfig(lr=args.lr),
+                       total_steps=args.steps,
+                       loss_impl=args.loss_impl)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    if mesh is not None:
+        shardings = param_shardings(
+            model.param_defs(), mesh,
+            shard_rules.logical_rules(
+                mesh, mode="2d" if cfg.param_count() > 2e10 else "train"))
+        params = jax.tree.map(jax.device_put, params, shardings)
+
+    state = init_train_state(params, tcfg)
+    step_fn = jax.jit(make_train_step(model, ctx, tcfg),
+                      donate_argnums=(0,))
+    pipe = SyntheticPipeline(vocab=cfg.vocab, seq_len=shape.seq_len,
+                             global_batch=shape.global_batch,
+                             family=cfg.family, d_model=cfg.d_model,
+                             vision_len=16 if cfg.family == "vlm" else 0,
+                             encoder_seq=cfg.encoder_seq)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        start, state = mgr.restore_latest(state)
+        print(f"resumed at step {start}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        state, m = step_fn(state, pipe.batch(s))
+        if mgr and (s + 1) % args.ckpt_every == 0:
+            mgr.save(s + 1, state)
+        if (s + 1) % 10 == 0 or s == start:
+            print(f"step {s + 1} loss {float(m['loss']):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

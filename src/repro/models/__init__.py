@@ -1,0 +1,4 @@
+"""LM substrate: composable model definitions for the 10 assigned
+architectures (dense GQA transformers, MoE, Mamba2 SSD, hybrid, enc-dec,
+VLM backbone)."""
+from repro.models.registry import build_model, MODEL_FAMILIES  # noqa: F401

@@ -1,0 +1,198 @@
+"""GQA attention with KV cache, sliding windows and M-RoPE.
+
+Two execution paths share one parameterisation:
+  * XLA einsum path (default; what the dry-run lowers and cost-analyses);
+  * Pallas flash kernel (train/prefill; ``use_pallas=True``).
+
+Cache layout: (B, Hkv, S_max, Dh) per layer, stacked (L, ...) by the
+model's scan.  Decode writes in-place at ``cur_len`` via
+dynamic_update_slice — production serving semantics, not concat.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.models import layers
+from repro.models.params import P
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": P((d, hq, dh), ("embed", "heads", "qdim")),
+        "wk": P((d, hkv, dh), ("embed", "kv_heads", "kvdim")),
+        "wv": P((d, hkv, dh), ("embed", "kv_heads", "kvdim")),
+        "wo": P((hq, dh, d), ("heads", "qdim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = P((hq, dh), ("heads", "qdim"), init="zeros")
+        defs["bk"] = P((hkv, dh), ("kv_heads", "kvdim"), init="zeros")
+        defs["bv"] = P((hkv, dh), ("kv_heads", "kvdim"), init="zeros")
+    return defs
+
+
+def _project_qkv(params, x, cfg, positions, mrope_positions=None):
+    q = jnp.einsum("bld,dhk->bhlk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->bhlk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->bhlk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+        k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_chunked(q, k, v, *, causal, window, q_chunk: int = 512,
+                  lk_offset: int = 0):
+    """Memory-efficient attention: scan over query chunks so only a
+    (Qc, Lk) logits slab is ever live (flash-attention schedule expressed
+    in XLA; the Pallas kernel is the TPU-native form).  Probabilities are
+    cast to bf16 before the PV matmul — halves the big-tensor traffic
+    with negligible quality impact (softmax stays f32)."""
+    b, hq, lq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qc = min(q_chunk, lq)
+    n_ch = -(-lq // qc)
+    pad = n_ch * qc - lq
+    qg = q.reshape(b, hkv, g, lq, dh)
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = jnp.moveaxis(qg.reshape(b, hkv, g, n_ch, qc, dh), 3, 0)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(v.dtype)
+    lk = k.shape[2]
+    kpos = jnp.arange(lk, dtype=jnp.int32)[None, :]
+    offs = jnp.arange(n_ch, dtype=jnp.int32) * qc
+
+    def body(_, xs):
+        qcnk, c0 = xs                                  # (b,hkv,g,qc,dh)
+        logits = jnp.einsum("bhgqd,bhsd->bhgqs",
+                            qcnk.astype(jnp.float32) * (dh ** -0.5), kf)
+        qpos = (c0 + jnp.arange(qc, dtype=jnp.int32))[:, None] \
+            + (lk - lq) - lk_offset
+        mask = jnp.ones((qc, lk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if isinstance(window, int):
+            if window > 0:
+                mask &= kpos > qpos - window
+        else:
+            mask &= jnp.where(window > 0, kpos > qpos - window, True)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqs,bhsd->bhgqd", probs, vf)
+        return None, out
+
+    _, chunks = jax.lax.scan(body, None, (qg, offs))
+    out = jnp.moveaxis(chunks, 0, 3).reshape(b, hkv, g, n_ch * qc, dh)
+    if pad:
+        out = out[:, :, :, :lq]
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Hq,Lq,D), k/v: (B,Hkv,Lk,D), mask: broadcastable (B,1,Lq,Lk)."""
+    b, hq, lq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    logits = jnp.einsum("bhglk,bhsk->bhgls",
+                        qf.reshape(b, hkv, g, lq, dh),
+                        k.astype(jnp.float32))
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                       logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgls,bhsk->bhglk", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, lq, dh).astype(q.dtype)
+
+
+def full_attention(params, x, cfg, *, positions, window: int = 0,
+                   causal: bool = True, mrope_positions=None,
+                   use_pallas: bool = False, attn_impl: str = "naive",
+                   q_chunk: int = 512):
+    """Self-attention over the whole sequence (train / prefill).
+    Returns (out, (k, v)) so prefill can materialise the cache."""
+    b, l, d = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions, mrope_positions)
+    if use_pallas and isinstance(window, int):
+        o = kops.attention(q, k, v, causal=causal, window=window,
+                           use_pallas=True)
+    elif attn_impl == "chunked":
+        o = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                          q_chunk=q_chunk)
+    else:
+        qpos = jnp.arange(l, dtype=jnp.int32)[:, None]
+        kpos = jnp.arange(l, dtype=jnp.int32)[None, :]
+        mask = jnp.ones((l, l), bool)
+        if causal:
+            mask &= kpos <= qpos
+        # ``window`` may be a traced per-layer scalar (gemma3's scanned
+        # local:global pattern); 0 means global.
+        if isinstance(window, int):
+            if window > 0:
+                mask &= kpos > qpos - window
+        else:
+            mask &= jnp.where(window > 0, kpos > qpos - window, True)
+        o = _sdpa(q, k, v, mask[None, None])
+    out = jnp.einsum("bhlk,hkd->bld", o, params["wo"])
+    return out, (k, v)
+
+
+def cross_attention(params, x, memory_kv, cfg):
+    """Decoder cross-attention; memory_kv = (k, v) from the encoder."""
+    q = jnp.einsum("bld,dhk->bhlk", x, params["wq"])
+    k, v = memory_kv
+    lk = k.shape[2]
+    mask = jnp.ones((1, 1, x.shape[1], lk), bool)
+    o = _sdpa(q, k, v, mask)
+    return jnp.einsum("bhlk,hkd->bld", o, params["wo"])
+
+
+class DecodeState(NamedTuple):
+    k: jnp.ndarray          # (B, Hkv, S_max, Dh)
+    v: jnp.ndarray
+    # cur_len carried by the caller (shared across layers)
+
+
+def decode_attention(params, x, cache: DecodeState, cur_len, cfg, *,
+                     window: int = 0, mrope_positions=None
+                     ) -> Tuple[jnp.ndarray, DecodeState]:
+    """One-token decode: write kv at ``cur_len``, attend to the prefix.
+
+    x: (B, 1, d).  cur_len: () int32 — tokens already in the cache.
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cur_len.astype(jnp.int32), (b, 1))
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions,
+                                   mrope_positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            cur_len, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            cur_len, axis=2)
+    s_max = k.shape[2]
+    kpos = jnp.arange(s_max, dtype=jnp.int32)
+    mask = kpos <= cur_len
+    if isinstance(window, int):
+        if window > 0:
+            mask &= kpos > cur_len - window
+    else:
+        mask &= jnp.where(window > 0, kpos > cur_len - window, True)
+    o = _sdpa(q, k, v, mask[None, None, None, :])
+    out = jnp.einsum("bhlk,hkd->bld", o, params["wo"])
+    return out, DecodeState(k, v)

@@ -1,0 +1,38 @@
+"""Runtime context threaded through model apply functions.
+
+Carries the mesh + logical->mesh axis facts the layers need (the MoE
+shard_map region, pallas toggles).  ``ModelContext()`` (no mesh) is the
+single-device smoke-test context.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    mesh: Any = None
+    batch_axes: Tuple[str, ...] = ()     # mesh axes sharding the batch dim
+    use_pallas: bool = False
+    remat: str = "none"                  # none | dots | full
+    unroll: bool = False                 # unroll layer scans (cost probes)
+    seq_parallel: bool = False           # Megatron-SP residual stream
+    attn_impl: str = "naive"             # naive | chunked (flash-style)
+    moe_impl: str = "gathered"           # gathered | 2d (weight-stationary serve)
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.shape:
+            return 1
+        return int(self.mesh.shape[name])
+
+    def batch_mesh_axes(self):
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    @property
+    def all_axis_names(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(self.mesh.axis_names)

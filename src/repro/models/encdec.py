@@ -1,0 +1,171 @@
+"""Encoder-decoder transformer (whisper-tiny backbone).
+
+The conv/audio frontend is a STUB: the encoder consumes precomputed frame
+embeddings (B, encoder_seq, d) from ``input_specs()``.  Encoder is
+bidirectional with sinusoidal positions; decoder is causal with learned
+self-attn KV cache + cross-attention onto the encoder memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers
+from repro.models.params import P
+from repro.models.transformer import KVCache, _maybe_remat, _scan, _stack_defs
+
+
+class EncDecCache(NamedTuple):
+    k: jnp.ndarray           # decoder self-attn (L, B, Hkv, S_max, Dh)
+    v: jnp.ndarray
+    mem_k: jnp.ndarray       # encoder memory projected per layer
+    mem_v: jnp.ndarray       # (L, B, Hkv, S_enc, Dh)
+    length: jnp.ndarray
+
+
+def _enc_block_defs(cfg):
+    return {
+        "ln1": layers.rmsnorm_defs(cfg.d_model),
+        "attn": attention.attn_defs(cfg),
+        "ln2": layers.rmsnorm_defs(cfg.d_model),
+        "mlp": layers.swiglu_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_defs(cfg):
+    return {
+        "ln1": layers.rmsnorm_defs(cfg.d_model),
+        "self_attn": attention.attn_defs(cfg),
+        "ln_x": layers.rmsnorm_defs(cfg.d_model),
+        "cross_attn": attention.attn_defs(cfg),
+        "ln2": layers.rmsnorm_defs(cfg.d_model),
+        "mlp": layers.swiglu_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+class EncDec:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": layers.embed_defs(cfg.vocab, cfg.d_model),
+            "enc_blocks": _stack_defs(_enc_block_defs(cfg),
+                                      cfg.encoder_layers),
+            "enc_ln_f": layers.rmsnorm_defs(cfg.d_model),
+            "dec_blocks": _stack_defs(_dec_block_defs(cfg), cfg.n_layers),
+            "ln_f": layers.rmsnorm_defs(cfg.d_model),
+            "unembed": layers.unembed_defs(cfg.d_model, cfg.vocab),
+        }
+
+    def encode(self, params, frames, ctx):
+        """frames: (B, S_enc, d) stub embeddings -> memory (B, S_enc, d)."""
+        cfg = self.cfg
+        b, s, d = frames.shape
+        pos = jnp.asarray(layers.sinusoidal_positions(s, d),
+                          cfg.activation_dtype)
+        x = frames.astype(cfg.activation_dtype) + pos[None]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(x, bparams):
+            h = layers.rmsnorm(bparams["ln1"], x)
+            a, _ = attention.full_attention(bparams["attn"], h, cfg,
+                                            positions=positions,
+                                            causal=False, use_pallas=False,
+                                            attn_impl=ctx.attn_impl)
+            x = x + a
+            h = layers.rmsnorm(bparams["ln2"], x)
+            return x + layers.swiglu(bparams["mlp"], h), None
+
+        body = _maybe_remat(body, ctx)
+        x, _ = _scan(ctx, body, x, params["enc_blocks"])
+        return layers.rmsnorm(params["enc_ln_f"], x)
+
+    def _project_memory(self, params, memory):
+        """Per-decoder-layer cross-attn K/V of the encoder memory."""
+        def one(bparams):
+            k = jnp.einsum("bld,dhk->bhlk", memory,
+                           bparams["cross_attn"]["wk"])
+            v = jnp.einsum("bld,dhk->bhlk", memory,
+                           bparams["cross_attn"]["wv"])
+            return k, v
+        return jax.vmap(one)(params["dec_blocks"])   # (L, B, Hkv, S, Dh)
+
+    def forward(self, params, tokens, ctx, *, frames=None,
+                return_cache: bool = False, last_only: bool = False,
+                return_hidden: bool = False, **_):
+        """Teacher-forced decoder over full token seq + encoder pass."""
+        cfg = self.cfg
+        memory = self.encode(params, frames, ctx)
+        mem_k, mem_v = self._project_memory(params, memory)
+        x = layers.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+        b, l, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+
+        def body(x, xs):
+            bparams, mk, mv = xs
+            h = layers.rmsnorm(bparams["ln1"], x)
+            a, kv = attention.full_attention(bparams["self_attn"], h, cfg,
+                                             positions=positions,
+                                             causal=True, use_pallas=False,
+                                             attn_impl=ctx.attn_impl)
+            x = x + a
+            h = layers.rmsnorm(bparams["ln_x"], x)
+            x = x + attention.cross_attention(bparams["cross_attn"], h,
+                                              (mk, mv), cfg)
+            h = layers.rmsnorm(bparams["ln2"], x)
+            return x + layers.swiglu(bparams["mlp"], h), kv
+
+        body = _maybe_remat(body, ctx)
+        x, kvs = _scan(ctx, body, x, (params["dec_blocks"], mem_k, mem_v))
+        x = layers.rmsnorm(params["ln_f"], x)
+        if last_only:
+            x = x[:, -1:, :]
+        if return_hidden:
+            return x, jnp.float32(0)
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        if not return_cache:
+            return logits, jnp.float32(0)
+        k, v = kvs
+        return logits, jnp.float32(0), EncDecCache(k, v, mem_k, mem_v,
+                                                   jnp.int32(l))
+
+    def decode(self, params, token, cache: EncDecCache, ctx, **_):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], token).astype(cfg.activation_dtype)
+        cur_len = cache.length
+
+        def body(x, xs):
+            bparams, k_l, v_l, mk, mv = xs
+            h = layers.rmsnorm(bparams["ln1"], x)
+            st = attention.DecodeState(k_l, v_l)
+            a, new_st = attention.decode_attention(bparams["self_attn"], h,
+                                                   st, cur_len, cfg)
+            x = x + a
+            h = layers.rmsnorm(bparams["ln_x"], x)
+            x = x + attention.cross_attention(bparams["cross_attn"], h,
+                                              (mk, mv), cfg)
+            h = layers.rmsnorm(bparams["ln2"], x)
+            return x + layers.swiglu(bparams["mlp"], h), (new_st.k, new_st.v)
+
+        x, (k_new, v_new) = _scan(
+            ctx, body, x, (params["dec_blocks"], cache.k, cache.v,
+                           cache.mem_k, cache.mem_v))
+        x = layers.rmsnorm(params["ln_f"], x)
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        return logits, EncDecCache(k_new, v_new, cache.mem_k, cache.mem_v,
+                                   cur_len + 1)
+
+    def init_cache(self, batch: int, s_max: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or cfg.activation_dtype
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, s_max, cfg.head_dim)
+        mem_shape = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_seq,
+                     cfg.head_dim)
+        return EncDecCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                           jnp.zeros(mem_shape, dt),
+                           jnp.zeros(mem_shape, dt), jnp.int32(0))

@@ -1,0 +1,240 @@
+"""SSM language model (mamba2) and hybrid SSM+shared-attention (zamba2).
+
+mamba2: a scan over identical SSD blocks.
+zamba2: 81 SSD blocks with ONE shared attention+MLP block (single weight
+copy, Zamba2's parameter-sharing trick; per-occurrence LoRA omitted —
+DESIGN.md §4) applied after every ``attn_every`` SSD blocks.  The shared
+block consumes extra FLOPs but no extra parameters — visible in the
+MODEL_FLOPS / HLO_FLOPs roofline ratio.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers, ssm
+from repro.models.params import P
+from repro.models.transformer import _maybe_remat, _scan, _stack_defs
+
+
+class SSMLMCache(NamedTuple):
+    conv: jnp.ndarray        # (L, B, Cc, K-1)
+    state: jnp.ndarray       # (L, B, H, P, N)
+    # hybrid extras (zamba2); zero-sized for pure ssm
+    attn_k: jnp.ndarray      # (Na, B, Hkv, S_max, Dh)
+    attn_v: jnp.ndarray
+    length: jnp.ndarray      # () int32
+
+
+def _split_stacked(tree, n: int):
+    """Split a layer-stacked param tree at index n along axis 0."""
+    return (jax.tree.map(lambda p: p[:n], tree),
+            jax.tree.map(lambda p: p[n:], tree))
+
+
+def _ssm_block_defs(cfg):
+    return {"ln": layers.rmsnorm_defs(cfg.d_model), "ssm": ssm.ssm_defs(cfg)}
+
+
+def _shared_attn_defs(cfg):
+    return {
+        "ln1": layers.rmsnorm_defs(cfg.d_model),
+        "attn": attention.attn_defs(cfg),
+        "ln2": layers.rmsnorm_defs(cfg.d_model),
+        "mlp": layers.swiglu_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+class SSMModel:
+    """Pure mamba2 or zamba2-style hybrid, selected by cfg.attn_every."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    @property
+    def n_attn_applications(self) -> int:
+        if self.cfg.attn_every <= 0:
+            return 0
+        return self.cfg.n_layers // self.cfg.attn_every
+
+    def param_defs(self):
+        cfg = self.cfg
+        defs = {
+            "embed": layers.embed_defs(cfg.vocab, cfg.d_model),
+            "blocks": _stack_defs(_ssm_block_defs(cfg), cfg.n_layers),
+            "ln_f": layers.rmsnorm_defs(cfg.d_model),
+            "unembed": layers.unembed_defs(cfg.d_model, cfg.vocab),
+        }
+        if cfg.attn_every > 0:
+            defs["shared_attn"] = _shared_attn_defs(cfg)
+        return defs
+
+    # ------------- helpers -------------
+    def _apply_shared_full(self, params, x, ctx, positions):
+        sp = params["shared_attn"]
+        h = layers.rmsnorm(sp["ln1"], x)
+        a, kv = attention.full_attention(sp["attn"], h, self.cfg,
+                                         positions=positions, causal=True,
+                                         use_pallas=ctx.use_pallas,
+                                         attn_impl=ctx.attn_impl)
+        x = x + a
+        h = layers.rmsnorm(sp["ln2"], x)
+        return x + layers.swiglu(sp["mlp"], h), kv
+
+    def _apply_shared_decode(self, params, x, st, cur_len, ctx):
+        sp = params["shared_attn"]
+        h = layers.rmsnorm(sp["ln1"], x)
+        a, new_st = attention.decode_attention(sp["attn"], h, st, cur_len,
+                                               self.cfg)
+        x = x + a
+        h = layers.rmsnorm(sp["ln2"], x)
+        return x + layers.swiglu(sp["mlp"], h), new_st
+
+    # ------------- forward -------------
+    def forward(self, params, tokens, ctx, *, return_cache: bool = False,
+                last_only: bool = False, return_hidden: bool = False, **_):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+        b, l, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+        ae = cfg.attn_every
+
+        if ae <= 0:
+            def body(x, bparams):
+                h = layers.rmsnorm(bparams["ln"], x)
+                y, cache = ssm.ssm_forward(bparams["ssm"], h, cfg,
+                                           unroll=ctx.unroll)
+                return x + y, cache
+            body = _maybe_remat(body, ctx)
+            x, caches = _scan(ctx, body, x, params["blocks"])
+            attn_kvs = None
+        else:
+            # scan over groups of ``ae`` ssm blocks; shared attn after each.
+            # n_layers need not divide ae (zamba2: 81 = 13*6 + 3): the tail
+            # ssm blocks run after the last shared-attn application.
+            n_groups = cfg.n_layers // ae
+            n_main = n_groups * ae
+            main, tail = _split_stacked(params["blocks"], n_main)
+            grouped = jax.tree.map(
+                lambda p: p.reshape((n_groups, ae) + p.shape[1:]), main)
+
+            def inner(x, bparams):
+                h = layers.rmsnorm(bparams["ln"], x)
+                y, cache = ssm.ssm_forward(bparams["ssm"], h, cfg,
+                                           unroll=ctx.unroll)
+                return x + y, cache
+
+            def group_body(x, gparams):
+                x, caches = _scan(ctx, inner, x, gparams)
+                x, kv = self._apply_shared_full(params, x, ctx, positions)
+                return x, (caches, kv)
+
+            group_body = _maybe_remat(group_body, ctx)
+            x, (caches, attn_kvs) = _scan(ctx, group_body, x, grouped)
+            caches = jax.tree.map(
+                lambda c: c.reshape((n_main,) + c.shape[2:]), caches)
+            if n_main < cfg.n_layers:
+                x, tail_caches = _scan(ctx, inner, x, tail)
+                caches = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0),
+                    caches, tail_caches)
+
+        x = layers.rmsnorm(params["ln_f"], x)
+        if last_only:
+            x = x[:, -1:, :]
+        if return_hidden:
+            return x, jnp.float32(0)
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        if not return_cache:
+            return logits, jnp.float32(0)
+        cache = self._assemble_cache(caches, attn_kvs, b, l)
+        return logits, jnp.float32(0), cache
+
+    def _assemble_cache(self, ssm_caches, attn_kvs, b, l):
+        cfg = self.cfg
+        na = self.n_attn_applications
+        if na > 0:
+            k, v = attn_kvs
+        else:
+            dh = cfg.head_dim
+            k = jnp.zeros((0, b, cfg.n_kv_heads, l, dh),
+                          cfg.activation_dtype)
+            v = k
+        return SSMLMCache(ssm_caches.conv, ssm_caches.state, k, v,
+                          jnp.int32(l))
+
+    # ------------- decode -------------
+    def decode(self, params, token, cache: SSMLMCache, ctx, **_):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], token).astype(cfg.activation_dtype)
+        cur_len = cache.length
+        ae = cfg.attn_every
+
+        if ae <= 0:
+            def body(x, xs):
+                bparams, conv, state = xs
+                h = layers.rmsnorm(bparams["ln"], x)
+                y, new = ssm.ssm_decode(bparams["ssm"], h,
+                                        ssm.SSMCache(conv, state), cfg)
+                return x + y, (new.conv, new.state)
+            x, (conv_new, state_new) = _scan(
+                ctx, body, x, (params["blocks"], cache.conv, cache.state))
+            k_new, v_new = cache.attn_k, cache.attn_v
+        else:
+            n_groups = cfg.n_layers // ae
+            n_main = n_groups * ae
+            main, tail = _split_stacked(params["blocks"], n_main)
+            grouped = jax.tree.map(
+                lambda p: p.reshape((n_groups, ae) + p.shape[1:]), main)
+            conv_g = cache.conv[:n_main].reshape(
+                (n_groups, ae) + cache.conv.shape[1:])
+            state_g = cache.state[:n_main].reshape(
+                (n_groups, ae) + cache.state.shape[1:])
+
+            def inner(x, ys):
+                bparams, c, s = ys
+                h = layers.rmsnorm(bparams["ln"], x)
+                y, new = ssm.ssm_decode(bparams["ssm"], h,
+                                        ssm.SSMCache(c, s), cfg)
+                return x + y, (new.conv, new.state)
+
+            def group_body(x, xs):
+                gparams, conv, state, k_l, v_l = xs
+                x, (conv_new, state_new) = _scan(
+                    ctx, inner, x, (gparams, conv, state))
+                st = attention.DecodeState(k_l, v_l)
+                x, new_st = self._apply_shared_decode(params, x, st,
+                                                      cur_len, ctx)
+                return x, (conv_new, state_new, new_st.k, new_st.v)
+
+            x, (conv_new, state_new, k_new, v_new) = _scan(
+                ctx, group_body, x,
+                (grouped, conv_g, state_g, cache.attn_k, cache.attn_v))
+            conv_new = conv_new.reshape((n_main,) + conv_new.shape[2:])
+            state_new = state_new.reshape((n_main,) + state_new.shape[2:])
+            if n_main < cfg.n_layers:
+                x, (conv_t, state_t) = _scan(
+                    ctx, inner, x, (tail, cache.conv[n_main:],
+                                    cache.state[n_main:]))
+                conv_new = jnp.concatenate([conv_new, conv_t], axis=0)
+                state_new = jnp.concatenate([state_new, state_t], axis=0)
+
+        x = layers.rmsnorm(params["ln_f"], x)
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        return logits, SSMLMCache(conv_new, state_new, k_new, v_new,
+                                  cur_len + 1)
+
+    def init_cache(self, batch: int, s_max: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or cfg.activation_dtype
+        cc = cfg.d_inner + 2 * cfg.ssm_state
+        conv = jnp.zeros((cfg.n_layers, batch, cc, cfg.ssm_conv - 1), dt)
+        state = jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                           cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        na = self.n_attn_applications
+        k = jnp.zeros((max(na, 0), batch, cfg.n_kv_heads, s_max,
+                       cfg.head_dim), dt)
+        return SSMLMCache(conv, state, k, k, jnp.int32(0))

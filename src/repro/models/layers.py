@@ -1,0 +1,123 @@
+"""Shared building blocks: norms, RoPE (incl. M-RoPE), SwiGLU, embeddings.
+
+Everything is functional: params are plain dict pytrees built from the
+``P`` definitions in :mod:`repro.models.params`.  Logical axis names used
+here: ``vocab, embed, heads, kv_heads, qdim, kvdim, mlp, experts, layers,
+ssm_inner, ssm_state``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, H, L, D); positions: (B, L) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[:, None, :, None] * freqs  # (B,1,L,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE.  x: (B, H, L, D); positions3: (3, B, L) for the
+    temporal/height/width streams; ``sections`` are frequency-pair counts
+    per stream (sum == D/2)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)        # (D/2,)
+    # pick which position stream drives each frequency pair
+    stream = np.repeat(np.arange(len(sections)), sections)        # (D/2,)
+    pos = positions3.astype(jnp.float32)[stream]                  # (D/2,B,L)
+    ang = jnp.transpose(pos, (1, 2, 0))[:, None, :, :] * freqs    # (B,1,L,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> np.ndarray:
+    """Classic transformer sin/cos table (whisper encoder stub)."""
+    pos = np.arange(length)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    tab = np.zeros((length, d), np.float32)
+    tab[:, 0::2] = np.sin(pos * div)
+    tab[:, 1::2] = np.cos(pos * div)
+    return tab
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def swiglu_defs(d: int, ff: int) -> dict:
+    return {
+        "w_gate": P((d, ff), ("embed", "mlp")),
+        "w_up": P((d, ff), ("embed", "mlp")),
+        "w_down": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int) -> dict:
+    return {"table": P((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_defs(d: int, vocab: int) -> dict:
+    return {"w": P((d, vocab), ("embed", "vocab"))}
+
+
+def unembed(params, x, softcap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", x, params["w"]).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

@@ -1,0 +1,143 @@
+"""Parameter definition trees: shapes + logical sharding axes.
+
+Every model defines ``param_defs(cfg) -> pytree of P``.  The same tree is
+consumed three ways:
+
+* ``init_params``      — materialise real arrays (smoke tests, examples);
+* ``abstract_params``  — ShapeDtypeStructs for ``jit(...).lower()`` (dry-run;
+  never allocates);
+* ``param_shardings``  — NamedShardings resolved through the logical-axis
+  rules in ``repro.runtime.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter: shape + logical axis names (len == ndim)."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_p(fn: Callable[[P], Any], defs):
+    return jax.tree.map(fn, defs, is_leaf=is_p)
+
+
+def n_params(defs) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(defs, is_leaf=is_p):
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def init_params(defs, key, dtype=None):
+    """Materialise real arrays.  Keys split deterministically per leaf."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_p)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        dt = dtype or leaf.dtype
+        if leaf.init == "zeros":
+            out.append(jnp.zeros(leaf.shape, dt))
+        elif leaf.init == "ones":
+            out.append(jnp.ones(leaf.shape, dt))
+        else:
+            fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+            scale = leaf.scale if leaf.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, leaf.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=None, shardings=None):
+    """ShapeDtypeStructs (optionally with shardings attached) — no alloc."""
+    if shardings is None:
+        return tree_map_p(
+            lambda p: jax.ShapeDtypeStruct(p.shape, dtype or p.dtype), defs)
+    return jax.tree.map(
+        lambda p, s: jax.ShapeDtypeStruct(p.shape, dtype or p.dtype, sharding=s),
+        defs, shardings, is_leaf=is_p)
+
+
+def param_pspecs(defs, rules: dict, mesh=None):
+    """PartitionSpecs from logical axes via ``rules`` (logical -> mesh axis).
+
+    Guards against (a) double-use of a mesh axis within one param and
+    (b) non-divisible dims (e.g. kv_heads=1 over a 16-way model axis) —
+    both degrade to replication on that dim, which is the correct
+    fallback rather than a GSPMD error.
+    """
+    from jax.sharding import PartitionSpec
+
+    def axis_size(key) -> int:
+        if mesh is None:
+            return 1
+        return int(np.prod([mesh.shape[a] for a in key]))
+
+    def one(p: P):
+        spec, used = [], set()
+        for dim, ax in zip(p.shape, p.axes):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is None:
+                spec.append(None)
+                continue
+            key = tuple(mesh_ax) if isinstance(mesh_ax, (list, tuple)) else (mesh_ax,)
+            if any(k in used for k in key) or (mesh is not None
+                                               and dim % axis_size(key) != 0):
+                spec.append(None)
+                continue
+            used.update(key)
+            spec.append(key if len(key) > 1 else key[0])
+        return PartitionSpec(*spec)
+
+    return tree_map_p(one, defs)
+
+
+def param_shardings(defs, mesh, rules: dict):
+    from jax.sharding import NamedSharding
+    pspecs = param_pspecs(defs, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+
+def validate_divisibility(defs, mesh, rules: dict, path=""):
+    """Every sharded dim must divide by the product of its mesh axes."""
+    problems = []
+
+    def walk(tree, prefix):
+        if is_p(tree):
+            for dim, ax in zip(tree.shape, tree.axes):
+                mesh_ax = rules.get(ax) if ax else None
+                if mesh_ax is None:
+                    continue
+                axes = mesh_ax if isinstance(mesh_ax, (list, tuple)) else [mesh_ax]
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                if dim % size != 0:
+                    problems.append(f"{prefix}: dim {dim} ({ax}) % {size} != 0")
+            return
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{prefix}/{k}")
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                walk(v, f"{prefix}[{i}]")
+
+    walk(defs, path)
+    return problems

@@ -1,0 +1,24 @@
+"""Model factory: family string -> model class."""
+from __future__ import annotations
+
+from repro.models.encdec import EncDec
+from repro.models.hybrid import SSMModel
+from repro.models.transformer import Transformer
+
+MODEL_FAMILIES = {
+    "dense": Transformer,
+    "moe": Transformer,
+    "vlm": Transformer,
+    "ssm": SSMModel,
+    "hybrid": SSMModel,
+    "encdec": EncDec,
+}
+
+
+def build_model(cfg):
+    try:
+        cls = MODEL_FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r} "
+                       f"(have {sorted(MODEL_FAMILIES)})") from None
+    return cls(cfg)

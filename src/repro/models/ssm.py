@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) block, TPU-native chunked form.
+
+The GPU reference implementation is a fused recurrent scan kernel; on TPU
+the right decomposition is the *block-matrix* SSD form (Dao & Gu 2024,
+§6): split the sequence into chunks of Q tokens, compute the intra-chunk
+quadratic term and the chunk summary states as dense einsums (MXU work),
+and carry the O(H*P*N) running state across chunks with a short
+``lax.scan`` — sequential length L/Q, each step a matmul, which keeps the
+MXU busy instead of emulating a length-L recurrence.
+
+Projection packing: [z|x] share one matmul whose output dim is
+shard-aligned (2*d_inner divides the model axis evenly and the z/x split
+lands on a shard boundary); the small B/C/dt projections stay replicated.
+
+Decode carries (conv_state (B, Cc, K-1), ssm_state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import P
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray        # (B, conv_channels, K-1)
+    state: jnp.ndarray       # (B, H, P, N) float32
+
+
+def ssm_defs(cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    k = cfg.ssm_conv
+    return {
+        "w_zx": P((d, 2 * din), ("embed", "mlp")),
+        "w_bc": P((d, 2 * n), ("embed", None)),
+        "w_dt": P((d, h), ("embed", None)),
+        "conv_x": P((din, k), ("mlp", None), scale=0.5),
+        "conv_x_b": P((din,), ("mlp",), init="zeros"),
+        "conv_bc": P((2 * n, k), (None, None), scale=0.5),
+        "conv_bc_b": P((2 * n,), (None,), init="zeros"),
+        "a_log": P((h,), (None,), init="zeros"),      # A = -exp(a_log)
+        "d_skip": P((h,), (None,), init="ones"),
+        "dt_bias": P((h,), (None,), init="zeros"),
+        "norm": P((din,), ("mlp",), init="ones"),
+        "w_out": P((din, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, L, C); w: (C, K)."""
+    k = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled K-tap FIR: K is 4 — cheaper than conv_general for TPU
+    # tap convention: w[:, K-1] multiplies the NEWEST sample — matches the
+    # decode path's (window * w).sum(-1) with window[..., K-1] = newest.
+    y = sum(pad[:, i:i + x.shape[1], :] * w[:, i][None, None, :]
+            for i in range(k))
+    return y + b[None, None, :]
+
+
+def _segsum(a):
+    """a: (..., Q).  T[i, j] = sum_{k=j+1..i} a_k (i >= j), -inf above."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    t = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, t, -jnp.inf)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def _project(params, x, cfg):
+    zx = jnp.einsum("bld,de->ble", x, params["w_zx"])
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bld,dn->bln", x, params["w_bc"])
+    dt = jnp.einsum("bld,dh->blh", x, params["w_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return z, xin, bc, dt
+
+
+def ssm_forward(params, x, cfg, *, unroll: bool = False
+                ) -> Tuple[jnp.ndarray, SSMCache]:
+    """Full-sequence forward (train / prefill).  x: (B, L, d_model).
+    ``unroll`` unrolls the inter-chunk scan (cost probes only)."""
+    b, l, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, l)
+    assert l % q == 0, (l, q)
+    c = l // q
+
+    z, xin0, bc0, dt = _project(params, x, cfg)
+    xin = jax.nn.silu(_causal_conv(xin0, params["conv_x"],
+                                   params["conv_x_b"]).astype(jnp.float32)
+                      ).astype(x.dtype)
+    bc = jax.nn.silu(_causal_conv(bc0, params["conv_bc"],
+                                  params["conv_bc_b"]).astype(jnp.float32)
+                     ).astype(x.dtype)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                # (B, L, N)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))     # (H,)
+    adt = a[None, None, :] * dt                           # (B, L, H)
+
+    xh = xin.reshape(b, c, q, h, p)
+    bq = bmat.reshape(b, c, q, n)
+    cq = cmat.reshape(b, c, q, n)
+    adt_c = adt.reshape(b, c, q, h)
+    dt_c = dt.reshape(b, c, q, h)
+
+    # ---- intra-chunk (quadratic within chunk, dense einsums) ----
+    lmat = jnp.exp(_segsum(jnp.transpose(adt_c, (0, 1, 3, 2))))  # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cq, bq)               # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, lmat, dt_c, xh,
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk summary states ----
+    cum = jnp.cumsum(adt_c, axis=2)                              # (B,C,Q,H)
+    total = cum[:, :, -1:, :]                                    # (B,C,1,H)
+    decay_to_end = jnp.exp(total - cum)                          # (B,C,Q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                         bq, dt_c * decay_to_end, xh,
+                         preferred_element_type=jnp.float32)     # (B,C,H,P,N)
+
+    # ---- inter-chunk recurrence (scan over C chunks) ----
+    chunk_decay = jnp.exp(total[:, :, 0, :])                     # (B,C,H)
+
+    def scan_fn(s_prev, inp):
+        dec, s_c = inp                                           # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+        unroll=True if unroll else 1)
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                        # (B,C,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)                                      # (B,C,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       cq, in_decay, s_prevs,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.reshape(b, l, h, p).astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(b, l, h * p)
+    y = _gated_rmsnorm(y, z, params["norm"])
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"])
+
+    # final cache for prefill->decode handoff (pre-conv activations)
+    conv_in = jnp.concatenate([xin0, bc0], axis=-1)
+    k = cfg.ssm_conv
+    conv_tail = jnp.transpose(conv_in[:, -(k - 1):, :], (0, 2, 1))
+    return out, SSMCache(conv_tail.astype(x.dtype), s_last)
+
+
+def ssm_decode(params, x, cache: SSMCache, cfg
+               ) -> Tuple[jnp.ndarray, SSMCache]:
+    """Single-token decode.  x: (B, 1, d_model)."""
+    b = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = cfg.d_inner
+    k = cfg.ssm_conv
+
+    z, xin, bc, dt = _project(params, x, cfg)
+    new_col = jnp.concatenate([xin, bc], axis=-1)[:, 0, :]       # (B, Cc)
+    win = jnp.concatenate([cache.conv, new_col[:, :, None]], axis=2)  # (B,Cc,K)
+    wfull = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=0)
+    bfull = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]])
+    conv_out = (win * wfull[None]).sum(-1) + bfull[None]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin_c, bc_c = conv_out[:, :din], conv_out[:, din:]
+    bvec, cvec = jnp.split(bc_c, 2, axis=-1)                     # (B, N)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt1 = dt[:, 0, :]                                            # (B, H)
+    da = jnp.exp(a[None] * dt1)                                  # (B, H)
+    xh = xin_c.reshape(b, h, p).astype(jnp.float32)
+    upd = (dt1[:, :, None, None] * xh[..., None]
+           * bvec.astype(jnp.float32)[:, None, None, :])
+    s_new = cache.state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cvec.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, params["norm"])
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"])
+    return out, SSMCache(win[:, :, 1:], s_new)

@@ -1,0 +1,239 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Layers are stacked on a leading ``layers`` axis and executed with
+``lax.scan`` (keeps the HLO size O(1) in depth — essential for compiling
+88-layer configs quickly).  Per-layer heterogeneity (gemma3's 5:1
+local:global window pattern) is passed as a scanned per-layer array.
+MoE archs with leading dense layers (kimi-k2) keep those layers
+unstacked before the scanned MoE stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, layers, moe
+from repro.models.params import P, tree_map_p
+
+
+def _sp_constrain(x, ctx):
+    """Megatron-style sequence parallelism: pin the residual stream to a
+    seq-dim 'model'-axis sharding between blocks.  GSPMD then converts
+    each TP all-reduce (2(n-1)/n ring bytes) into a reduce-scatter +
+    all-gather pair ((n-1)/n each, placed around the elementwise/norm
+    region), and the norms/residuals execute on 1/n of the tokens —
+    cutting both the collective and per-device memory roofline terms."""
+    if (ctx.seq_parallel and ctx.mesh is not None
+            and ctx.mesh.shape.get("model", 1) > 1
+            and x.shape[1] % ctx.mesh.shape["model"] == 0):
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        sh = NamedSharding(ctx.mesh,
+                           PS(ctx.batch_mesh_axes(), "model", None))
+        return jax.lax.with_sharding_constraint(x, sh)
+    return x
+
+
+def _scan(ctx, body, carry, xs):
+    """lax.scan that fully unrolls under ctx.unroll (cost probes: XLA
+    counts a while body once; unrolled probes recover true per-layer
+    costs — see launch.dryrun.probe_variants)."""
+    return jax.lax.scan(body, carry, xs, unroll=True if ctx.unroll else 1)
+
+
+def _stack_defs(defs, n: int):
+    return tree_map_p(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.dtype, p.init,
+                    p.scale), defs)
+
+
+def _layer_windows(cfg) -> np.ndarray:
+    """Per-layer sliding-window sizes (0 = global)."""
+    if cfg.local_per_global > 0 and cfg.window > 0:
+        pat = [cfg.window] * cfg.local_per_global + [0]
+        w = [pat[l % len(pat)] for l in range(cfg.n_layers)]
+        return np.asarray(w, np.int32)
+    return np.full(cfg.n_layers, cfg.window, np.int32)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (L, B, Hkv, S_max, Dh)
+    v: jnp.ndarray
+    length: jnp.ndarray     # () int32
+
+
+class Transformer:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------- params ----------------
+    def _block_defs(self, is_moe_layer: bool, d_ff: Optional[int] = None):
+        cfg = self.cfg
+        defs = {
+            "ln1": layers.rmsnorm_defs(cfg.d_model),
+            "attn": attention.attn_defs(cfg),
+            "ln2": layers.rmsnorm_defs(cfg.d_model),
+        }
+        if is_moe_layer:
+            defs["moe"] = moe.moe_defs(cfg)
+        else:
+            defs["mlp"] = layers.swiglu_defs(cfg.d_model, d_ff or cfg.d_ff)
+        return defs
+
+    def param_defs(self):
+        cfg = self.cfg
+        n_scan = cfg.n_layers - cfg.first_k_dense
+        defs = {
+            "embed": layers.embed_defs(cfg.vocab, cfg.d_model),
+            "blocks": _stack_defs(self._block_defs(cfg.is_moe), n_scan),
+            "ln_f": layers.rmsnorm_defs(cfg.d_model),
+            "unembed": layers.unembed_defs(cfg.d_model, cfg.vocab),
+        }
+        for i in range(cfg.first_k_dense):
+            defs[f"dense{i}"] = self._block_defs(
+                False, cfg.dense_d_ff or cfg.d_ff)
+        return defs
+
+    # ---------------- blocks ----------------
+    def _block_full(self, bparams, x, ctx, *, window, positions,
+                    mrope_positions, is_moe_layer):
+        cfg = self.cfg
+        x = _sp_constrain(x, ctx)
+        h = layers.rmsnorm(bparams["ln1"], x)
+        attn_out, kv = attention.full_attention(
+            bparams["attn"], h, cfg, positions=positions,
+            window=window, causal=True, mrope_positions=mrope_positions,
+            use_pallas=ctx.use_pallas, attn_impl=ctx.attn_impl)
+        x = _sp_constrain(x + attn_out, ctx)
+        h = layers.rmsnorm(bparams["ln2"], x)
+        if is_moe_layer:
+            ffn_out, aux = moe.moe_apply(bparams["moe"], h, cfg, ctx)
+        else:
+            ffn_out, aux = layers.swiglu(bparams["mlp"], h), jnp.float32(0)
+        return _sp_constrain(x + ffn_out, ctx), aux, kv
+
+    def _block_decode(self, bparams, x, cache_kv, cur_len, ctx, *, window,
+                      mrope_positions, is_moe_layer):
+        cfg = self.cfg
+        h = layers.rmsnorm(bparams["ln1"], x)
+        attn_out, new_kv = attention.decode_attention(
+            bparams["attn"], h, cache_kv, cur_len, cfg, window=window,
+            mrope_positions=mrope_positions)
+        x = x + attn_out
+        h = layers.rmsnorm(bparams["ln2"], x)
+        if is_moe_layer:
+            ffn_out, _ = moe.moe_apply(bparams["moe"], h, cfg, ctx)
+        else:
+            ffn_out = layers.swiglu(bparams["mlp"], h)
+        return x + ffn_out, new_kv
+
+    # ---------------- full-sequence forward (train / prefill) ----------
+    def forward(self, params, tokens, ctx, *, embeds=None,
+                mrope_positions=None, return_cache: bool = False,
+                last_only: bool = False, return_hidden: bool = False):
+        """tokens: (B, L) int32.  For the vlm family, ``embeds`` (B, Lv, d)
+        patch embeddings are prepended (stub frontend).  ``last_only``
+        restricts logits to the final position (prefill: avoids the
+        (B, L, vocab) materialisation)."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+        if embeds is not None:
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        b, l, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+        windows = jnp.asarray(_layer_windows(cfg))
+
+        aux_total = jnp.float32(0)
+        caches = []
+        for i in range(cfg.first_k_dense):
+            x, aux, kv = self._block_full(
+                params[f"dense{i}"], x, ctx, window=0, positions=positions,
+                mrope_positions=mrope_positions, is_moe_layer=False)
+            aux_total += aux
+            caches.append(kv)
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            bparams, window = xs
+            x, aux, kv = self._block_full(
+                bparams, x, ctx, window=window, positions=positions,
+                mrope_positions=mrope_positions, is_moe_layer=cfg.is_moe)
+            return (x, aux_acc + aux), kv
+
+        body = _maybe_remat(body, ctx)
+        (x, aux_total), kvs = _scan(
+            ctx, body, (x, aux_total),
+            (params["blocks"], windows[cfg.first_k_dense:]))
+
+        x = layers.rmsnorm(params["ln_f"], x)
+        if last_only:
+            x = x[:, -1:, :]
+        if return_hidden:
+            return x, aux_total
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        if not return_cache:
+            return logits, aux_total
+        # prefill: assemble the KV cache (dense prefix + scanned stack)
+        k_all, v_all = kvs
+        for i, (k, v) in enumerate(caches):
+            k_all = jnp.concatenate([k[None], k_all], axis=0)
+            v_all = jnp.concatenate([v[None], v_all], axis=0)
+        cache = KVCache(k_all, v_all, jnp.int32(l))
+        return logits, aux_total, cache
+
+    # ---------------- single-token decode ----------------
+    def decode(self, params, token, cache: KVCache, ctx, *,
+               mrope_positions=None):
+        """token: (B, 1) int32; cache.k/v: (L, B, Hkv, S_max, Dh)."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], token).astype(cfg.activation_dtype)
+        windows = jnp.asarray(_layer_windows(cfg))
+        cur_len = cache.length
+
+        nd = cfg.first_k_dense
+        new_dense = []
+        for i in range(nd):
+            st = attention.DecodeState(cache.k[i], cache.v[i])
+            x, new_kv = self._block_decode(
+                params[f"dense{i}"], x, st, cur_len, ctx, window=0,
+                mrope_positions=mrope_positions, is_moe_layer=False)
+            new_dense.append(new_kv)
+
+        def body(x, xs):
+            bparams, window, k_l, v_l = xs
+            st = attention.DecodeState(k_l, v_l)
+            x, new_kv = self._block_decode(
+                bparams, x, st, cur_len, ctx, window=window,
+                mrope_positions=mrope_positions, is_moe_layer=cfg.is_moe)
+            return x, (new_kv.k, new_kv.v)
+
+        x, (k_new, v_new) = _scan(
+            ctx, body, x, (params["blocks"], windows[nd:],
+                           cache.k[nd:], cache.v[nd:]))
+
+        for i, st in enumerate(new_dense):
+            k_new = jnp.concatenate([st.k[None], k_new], axis=0)
+            v_new = jnp.concatenate([st.v[None], v_new], axis=0)
+        x = layers.rmsnorm(params["ln_f"], x)
+        logits = layers.unembed(params["unembed"], x, cfg.logits_softcap)
+        return logits, KVCache(k_new, v_new, cur_len + 1)
+
+    def init_cache(self, batch: int, s_max: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or cfg.activation_dtype
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, s_max, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                       jnp.int32(0))
+
+
+def _maybe_remat(fn, ctx):
+    if ctx.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if ctx.remat == "full":
+        return jax.checkpoint(fn)
+    return fn

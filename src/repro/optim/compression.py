@@ -1,0 +1,79 @@
+"""int8 gradient compression with error feedback.
+
+Used on the *cross-pod* (DCN) gradient reduction path: within a pod the
+ICI all-reduce runs at full precision (GSPMD-inserted), but the pod axis
+reduction in ``runtime.train`` can optionally go through
+``compress -> psum -> decompress`` inside a shard_map region, cutting
+cross-pod bytes 4x.  Error feedback keeps the quantisation bias out of
+the optimiser trajectory (Seide et al. / EF-SGD style).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any          # same pytree as grads, f32
+
+
+def ef_init(grads_like) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Add residual, quantise; returns (q_tree, scale_tree, new_ef)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        err = x - dequantize_int8(q, s)
+        return q, s, err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]),
+            EFState(tdef.unflatten([o[2] for o in out])))
+
+
+def decompress_grads(q_tree, scale_tree):
+    return jax.tree.map(dequantize_int8, q_tree, scale_tree)
+
+
+def crosspod_psum_compressed(grads, ef: EFState, axis: str = "pod"):
+    """psum over ``axis`` in int8 (call inside shard_map).  The int8
+    payload is what crosses the DCN; the psum accumulates in int32 to
+    avoid overflow, then rescales by the max of the per-pod scales."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        s_max = jax.lax.pmax(s, axis)
+        # requantise against the common scale so the integer sum is exact
+        q = jnp.clip(jnp.round(x / s_max), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        n = jax.lax.axis_size(axis)
+        out = total.astype(jnp.float32) * s_max / n
+        err = x - dequantize_int8(q, s_max)
+        return out.astype(g.dtype), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    res = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in res]),
+            EFState(tdef.unflatten([o[1] for o in res])))

@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    # (step+1)/warmup: the first step must not be a zero-lr no-op
+    warm = peak_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup, 1))
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

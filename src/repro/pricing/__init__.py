@@ -1,0 +1,2 @@
+"""Monte Carlo option-pricing workload (the paper's evaluation substrate)."""
+from repro.pricing.options import OptionTask  # noqa: F401

@@ -1,0 +1,58 @@
+"""Monte Carlo pricing engine: groups tasks by (kind, steps) and dispatches
+each group to one kernel call (Pallas or the jnp oracle).
+
+Also provides the per-task FLOP estimate used to derive platform
+throughput (beta) from application GFLOPS — the count is dominated by the
+Philox rounds exactly as the paper notes random generation dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.mc_pricing import BLOCK_PATHS
+from repro.pricing.options import KIND_IDS, OptionTask
+
+# flop-equivalents per (path, step): 10 philox rounds x ~16 uint ops,
+# box-muller (~24 incl. log/cos), GBM update + payoff bookkeeping (~10).
+FLOPS_PER_PATH_STEP = 200.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceResult:
+    name: str
+    price: float
+    stderr: float
+
+
+def task_flops(task: OptionTask) -> float:
+    return FLOPS_PER_PATH_STEP * task.steps * max(task.n_paths, 1)
+
+
+def price_tasks(tasks: Sequence[OptionTask], *, seed: int = 0,
+                use_pallas: bool = False, max_block_paths: int = 1 << 22
+                ) -> List[PriceResult]:
+    """Price every task; one kernel launch per (kind, steps) group."""
+    groups = defaultdict(list)
+    for idx, t in enumerate(tasks):
+        if t.n_paths <= 0:
+            raise ValueError(f"task {t.name} has no n_paths set")
+        groups[(t.kind, t.steps)].append(idx)
+
+    results: List[PriceResult] = [None] * len(tasks)  # type: ignore
+    for (kind, steps), idxs in groups.items():
+        group = [tasks[i] for i in idxs]
+        params = jnp.asarray(np.stack([t.param_row() for t in group]))
+        n_blocks = int(np.ceil(max(t.n_paths for t in group) / BLOCK_PATHS))
+        mean, stderr = ops.mc_price(params, kind_id=KIND_IDS[kind],
+                                    steps=steps, n_blocks=n_blocks,
+                                    seed=seed, use_pallas=use_pallas)
+        for j, i in enumerate(idxs):
+            results[i] = PriceResult(group[j].name, float(mean[j]),
+                                     float(stderr[j]))
+    return results

@@ -1,0 +1,68 @@
+"""Option task definitions: GBM dynamics + payoffs.
+
+Kinds supported (grouped so each Pallas call handles one (kind, steps)
+group; see `engine.py`):
+  * european_call / european_put     (terminal payoff)
+  * asian_call                       (arithmetic average)
+  * barrier_up_out_call              (up-and-out knockout)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+KINDS = ("european_call", "european_put", "asian_call", "barrier_up_out_call")
+KIND_IDS = {k: i for i, k in enumerate(KINDS)}
+
+# parameter row layout shared by kernel / ref / engine
+PARAM_COLS = ("s0", "strike", "rate", "sigma", "maturity", "barrier", "n_paths")
+N_PARAM_COLS = 8  # padded to 8 for alignment
+
+
+@dataclasses.dataclass(frozen=True)
+class OptionTask:
+    name: str
+    kind: str
+    s0: float
+    strike: float
+    rate: float
+    sigma: float
+    maturity: float
+    steps: int = 1
+    barrier: float = float("inf")
+    n_paths: int = 0            # filled by accuracy sizing
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown option kind {self.kind}")
+        if self.kind.startswith("european") and self.steps != 1:
+            object.__setattr__(self, "steps", 1)
+
+    def param_row(self) -> np.ndarray:
+        row = np.zeros(N_PARAM_COLS, np.float32)
+        row[:7] = (self.s0, self.strike, self.rate, self.sigma,
+                   self.maturity, self.barrier, float(self.n_paths))
+        return row
+
+    def with_paths(self, n: int) -> "OptionTask":
+        return dataclasses.replace(self, n_paths=int(n))
+
+
+def black_scholes(kind: str, s0, k, r, sigma, t) -> float:
+    """Closed form for European options (statistical oracle in tests)."""
+    from math import erf, exp, log, sqrt
+
+    def ncdf(x):
+        return 0.5 * (1.0 + erf(x / sqrt(2.0)))
+
+    d1 = (log(s0 / k) + (r + 0.5 * sigma * sigma) * t) / (sigma * sqrt(t))
+    d2 = d1 - sigma * sqrt(t)
+    call = s0 * ncdf(d1) - k * exp(-r * t) * ncdf(d2)
+    if kind == "european_call":
+        return call
+    if kind == "european_put":
+        return call - s0 + k * exp(-r * t)
+    raise ValueError(f"no closed form for {kind}")

@@ -1,0 +1,58 @@
+"""Workload generation: 128 option-pricing tasks (paper §IV.A.1).
+
+Parameters are drawn from the ranges of the Kaiserslautern option-pricing
+benchmark; N per task is sized so the Monte Carlo standard error hits the
+paper's $0.001 accuracy target, via a pilot run.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.pricing.options import KIND_IDS, OptionTask
+
+ACCURACY_TARGET = 0.001     # dollars, paper §IV.A.1
+PILOT_PATHS = 8192
+
+
+def generate_tasks(n_tasks: int = 128, seed: int = 7,
+                   kinds: Sequence[str] = ("european_call", "european_put",
+                                           "asian_call",
+                                           "barrier_up_out_call"),
+                   steps_choices: Sequence[int] = (64, 128, 256),
+                   ) -> List[OptionTask]:
+    """Kaiserslautern-style parameter ranges; mix of payoff kinds."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for t in range(n_tasks):
+        kind = kinds[t % len(kinds)]
+        s0 = rng.uniform(50.0, 150.0)
+        strike = s0 * rng.uniform(0.8, 1.2)
+        rate = rng.uniform(0.005, 0.08)
+        sigma = rng.uniform(0.1, 0.6)
+        maturity = rng.uniform(0.25, 3.0)
+        steps = 1 if kind.startswith("european") else int(rng.choice(steps_choices))
+        barrier = s0 * rng.uniform(1.3, 2.0) if kind == "barrier_up_out_call" else float("inf")
+        tasks.append(OptionTask(f"opt{t:03d}", kind, float(s0), float(strike),
+                                float(rate), float(sigma), float(maturity),
+                                steps=steps, barrier=float(barrier)))
+    return tasks
+
+
+def size_for_accuracy(tasks: List[OptionTask], *, target: float = ACCURACY_TARGET,
+                      pilot_paths: int = PILOT_PATHS, seed: int = 0,
+                      use_pallas: bool = False, max_paths: int = 1 << 31
+                      ) -> List[OptionTask]:
+    """Pilot-run each task, then set N = (sigma_payoff / target)^2."""
+    from repro.pricing.engine import price_tasks
+
+    pilot = [t.with_paths(pilot_paths) for t in tasks]
+    res = price_tasks(pilot, seed=seed, use_pallas=use_pallas)
+    sized = []
+    for t, r in zip(tasks, res):
+        sigma_payoff = r.stderr * np.sqrt(pilot_paths)
+        n = int(np.ceil((sigma_payoff / target) ** 2))
+        n = int(np.clip(n, 16384, max_paths))
+        sized.append(t.with_paths(n))
+    return sized

@@ -1,0 +1,4 @@
+from repro.models.context import ModelContext  # noqa: F401
+from repro.runtime.train import (TrainConfig, TrainState, init_train_state,  # noqa: F401
+                                 make_train_step)
+from repro.runtime.serve import make_decode_step, make_prefill_step  # noqa: F401

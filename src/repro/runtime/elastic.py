@@ -1,0 +1,121 @@
+"""Elastic scaling, straggler mitigation and failure handling.
+
+This is where the paper's contribution becomes the framework's
+fault-tolerance mechanism: the cluster is modelled as a set of
+heterogeneous platforms (pod slices) with fitted (beta, gamma) latency
+models; workload shares are an allocation matrix from the MILP.  On a
+health event the controller
+
+  * updates the affected platform's beta (degraded throughput — straggler)
+    or removes it (failure / elastic scale-down), or appends a platform
+    (scale-up),
+  * re-solves the allocation under the same cost budget,
+  * reports the delta so the serving router / training driver can move
+    request shares or re-shard (checkpoint restore with new-mesh
+    shardings, `CheckpointManager.restore(..., shardings)`).
+
+Together with the stateless data pipeline (batches are f(seed, step)) and
+atomic checkpoints this gives checkpoint/restart fault tolerance with
+MILP-optimal post-failure rebalancing instead of naive even re-splits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import heuristics, milp
+from repro.core.problem import AllocationProblem
+
+
+@dataclasses.dataclass
+class PlatformHealth:
+    name: str
+    throughput_scale: float = 1.0     # 1.0 healthy; <1 degraded; 0 dead
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class ElasticController:
+    problem: AllocationProblem
+    cost_cap: Optional[float] = None
+    backend: str = "bnb"
+    straggler_threshold: float = 0.8   # rebalance when throughput < 80%
+
+    def __post_init__(self):
+        self.health: Dict[str, PlatformHealth] = {
+            n: PlatformHealth(n) for n in
+            (self.problem.platform_names or
+             [f"p{i}" for i in range(self.problem.mu)])}
+        self._alloc: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    def current_problem(self) -> Tuple[AllocationProblem, List[int]]:
+        """Problem restricted to live platforms, betas degraded by health."""
+        names = list(self.health)
+        live = [i for i, n in enumerate(names) if self.health[n].alive]
+        if not live:
+            raise RuntimeError("no live platforms")
+        scale = np.array([1.0 / max(self.health[names[i]].throughput_scale,
+                                    1e-6) for i in live])
+        p = self.problem
+        sub = AllocationProblem(
+            p.beta[live] * scale[:, None], p.gamma[live], p.n,
+            p.rho[live], p.pi[live],
+            tuple(names[i] for i in live), p.task_names)
+        return sub, live
+
+    def solve(self, **kw) -> np.ndarray:
+        sub, live = self.current_problem()
+        res = milp.solve(sub, cost_cap=self.cost_cap, backend=self.backend,
+                         **kw)
+        if res.alloc is None:
+            # budget unsatisfiable after failures -> fall back to fastest
+            # feasible (cheapest platform) and surface the violation
+            alloc_sub = heuristics.cheapest_single_platform(sub)
+        else:
+            alloc_sub = res.alloc
+        full = np.zeros((self.problem.mu, self.problem.tau))
+        for r, i in enumerate(live):
+            full[i] = alloc_sub[r]
+        self._alloc = full
+        return full
+
+    # ------------------------------------------------------------------
+    def report_throughput(self, name: str, observed_scale: float
+                          ) -> Optional[np.ndarray]:
+        """Straggler detection: rebalance if a platform slows past the
+        threshold (the paper's 'static allocation performed on a regular
+        interval with updated task information' generalised)."""
+        h = self.health[name]
+        h.throughput_scale = observed_scale
+        if observed_scale < self.straggler_threshold:
+            return self.solve()
+        return None
+
+    def fail(self, name: str) -> np.ndarray:
+        self.health[name].alive = False
+        return self.solve()
+
+    def restore(self, name: str, throughput_scale: float = 1.0) -> np.ndarray:
+        self.health[name].alive = True
+        self.health[name].throughput_scale = throughput_scale
+        return self.solve()
+
+    def scale_up(self, beta_row: np.ndarray, gamma_row: np.ndarray,
+                 rho: float, pi: float, name: str) -> np.ndarray:
+        """Elastic scale-up: append a platform and re-solve."""
+        p = self.problem
+        self.problem = AllocationProblem(
+            np.vstack([p.beta, beta_row[None]]),
+            np.vstack([p.gamma, gamma_row[None]]),
+            p.n, np.append(p.rho, rho), np.append(p.pi, pi),
+            tuple(p.platform_names or []) + (name,), p.task_names)
+        self.health[name] = PlatformHealth(name)
+        return self.solve()
+
+    @property
+    def allocation(self) -> Optional[np.ndarray]:
+        return self._alloc

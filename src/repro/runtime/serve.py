@@ -1,0 +1,51 @@
+"""Serving-step builders: batched prefill and single-token decode.
+
+``decode_step`` is what the decode_32k / long_500k dry-run cells lower:
+one new token against a seq_len-deep cache, cache updated in place
+(buffers donated by the caller's jit).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.context import ModelContext
+
+
+def make_prefill_step(model, ctx: ModelContext) -> Callable:
+    def prefill_step(params, batch: dict):
+        kw = {}
+        if "vision_embeds" in batch:
+            kw["embeds"] = batch["vision_embeds"]
+        if "mrope_positions" in batch:
+            kw["mrope_positions"] = batch["mrope_positions"]
+        if "frames" in batch:
+            kw["frames"] = batch["frames"]
+        logits, _aux, cache = model.forward(
+            params, batch["tokens"], ctx, return_cache=True,
+            last_only=True, **kw)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return prefill_step
+
+
+def make_decode_step(model, ctx: ModelContext) -> Callable:
+    def decode_step(params, token, cache, extras: dict | None = None):
+        kw = dict(extras or {})
+        logits, new_cache = model.decode(params, token, cache, ctx, **kw)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+    return decode_step
+
+
+def greedy_generate(model, params, ctx, prompt_tokens, cache, n_steps: int):
+    """Simple autoregressive loop (examples/tests)."""
+    decode = make_decode_step(model, ctx)
+    tok = prompt_tokens[:, -1:]
+    out = []
+    for _ in range(n_steps):
+        tok, cache = decode(params, tok, cache)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests must see the real device count (1 CPU) — the dry-run driver sets
+# its own XLA_FLAGS in a subprocess.  Keep hypothesis deadlines off (CPU
+# jit compiles inside properties).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import hypothesis
+
+hypothesis.settings.register_profile(
+    "repro", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+hypothesis.settings.load_profile("repro")

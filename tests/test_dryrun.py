@@ -1,0 +1,123 @@
+"""Dry-run machinery tests.
+
+The production-mesh compiles need 512 forced host devices, which must be
+set before jax initialises — so the real cells run in a SUBPROCESS; in
+this process we test the pure pieces (HLO collective parsing, roofline
+arithmetic, probe plans, cell support matrix).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_is_supported
+from repro.launch import roofline as rf
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_parsing():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,512]{1,0} all-gather(%y), replica_groups=[8,16]<=[128], dimensions={0}
+  %done = f32[4]{0} all-reduce-done(%st)
+  %cp = u32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = rf.collective_bytes(hlo, 16)
+    ar = 128 * 256 * 4 * (2 * 3 / 4)
+    assert abs(out["all-reduce"] - ar) < 1e-6
+    ag = 64 * 512 * 2 * (15 / 16)
+    assert abs(out["all-gather"] - ag) < 1e-6
+    assert out["collective-permute"] == 16 * 4
+
+
+def test_roofline_terms_arithmetic():
+    t = rf.RooflineTerms(flops=197e12, hbm_bytes=819e9,
+                         coll_bytes={"all-reduce": 50e9}, n_devices=4)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 1.0) < 1e-9
+    assert abs(t.t_collective - 1.0) < 1e-9
+    assert t.bound_time == max(t.t_compute, t.t_memory, t.t_collective)
+
+
+def test_cell_support_matrix():
+    n_cells = 0
+    n_skip = 0
+    for a, cfg in ARCHS.items():
+        for s, shape in SHAPES.items():
+            n_cells += 1
+            ok, why = cell_is_supported(a, cfg.family, shape)
+            if not ok:
+                n_skip += 1
+                assert shape.name == "long_500k"
+    assert n_cells == 40
+    assert n_skip == 7      # 10 archs - 3 sub-quadratic
+
+
+def test_probe_plan_counts():
+    from repro.launch.dryrun import probe_plan  # noqa: delayed (sets XLA_FLAGS)
+    for a, cfg in ARCHS.items():
+        base, deltas = probe_plan(cfg)
+        # reconstructed layer count must equal the real one
+        if cfg.family in ("dense", "moe", "vlm", "ssm"):
+            total = base.n_layers + sum(m * (hi.n_layers - lo.n_layers)
+                                        for hi, lo, m in deltas)
+            assert total == cfg.n_layers, a
+        if cfg.family == "hybrid":
+            total = base.n_layers + sum(m * (hi.n_layers - lo.n_layers)
+                                        for hi, lo, m in deltas)
+            assert total == cfg.n_layers, a
+
+
+@pytest.mark.slow
+def test_one_cell_compiles_on_production_mesh():
+    """Full 16x16-mesh lower+compile for one small cell, in a subprocess
+    with 512 forced host devices."""
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.dryrun import run_cell;"
+        "r = run_cell('gemma3-1b','decode_32k',verbose=False,skip_probes=True);"
+        "import json; print('RESULT:'+json.dumps(r['status']))"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=540, env=env)
+    assert "RESULT:\"ok\"" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_moe_shard_map_matches_local():
+    """moe_apply under a real (1, 4) mesh == the local (no-collective)
+    path, in a subprocess with 4 forced host devices."""
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.models import moe
+from repro.models.context import ModelContext
+from repro.models.params import init_params, param_shardings
+cfg = ModelConfig(name='m', family='moe', n_layers=1, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=96, vocab=128, head_dim=16,
+                  n_experts=8, experts_per_token=2, capacity_factor=16.0,
+                  dtype='float32')
+params = init_params(moe.moe_defs(cfg), jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+ref, _ = moe.moe_apply(params, x, cfg, ModelContext())
+mesh = jax.make_mesh((1, 4), ('data', 'model'))
+ctx = ModelContext(mesh=mesh, batch_axes=('data',))
+with jax.set_mesh(mesh) if hasattr(jax, 'set_mesh') else mesh:
+    out, aux = jax.jit(lambda p, xx: moe.moe_apply(p, xx, cfg, ctx))(params, x)
+err = float(jnp.abs(out - ref).max())
+print('ERR:', err)
+assert err < 1e-4, err
+print('OK')
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=540, env=env)
+    assert "OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]

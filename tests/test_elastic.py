@@ -1,0 +1,60 @@
+"""Elastic controller: failure, straggler and scale-up re-allocation."""
+import numpy as np
+
+from repro.core import heuristics
+from repro.core.problem import AllocationProblem
+from repro.runtime.elastic import ElasticController
+
+
+def _problem():
+    rng = np.random.default_rng(4)
+    mu, tau = 4, 6
+    return AllocationProblem(
+        rng.uniform(1e-6, 1e-5, (mu, tau)),
+        rng.uniform(0.5, 5.0, (mu, tau)),
+        rng.uniform(1e6, 1e7, tau),
+        np.array([60.0, 600.0, 60.0, 3600.0]),
+        np.array([0.01, 0.02, 0.05, 0.3]),
+        platform_names=("a", "b", "c", "d"))
+
+
+def test_initial_solve_valid():
+    ctl = ElasticController(_problem(), cost_cap=None)
+    alloc = ctl.solve(node_limit=200, time_limit_s=20)
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_failure_moves_work_off_dead_platform():
+    ctl = ElasticController(_problem(), cost_cap=None)
+    ctl.solve(node_limit=200, time_limit_s=20)
+    alloc = ctl.fail("a")
+    assert alloc[0].sum() == 0.0
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_straggler_triggers_rebalance():
+    ctl = ElasticController(_problem(), cost_cap=None,
+                            straggler_threshold=0.8)
+    base = ctl.solve(node_limit=200, time_limit_s=20)
+    out = ctl.report_throughput("b", 0.95)   # mild: no rebalance
+    assert out is None
+    out = ctl.report_throughput("b", 0.3)    # severe: rebalance
+    assert out is not None
+    # stale allocation is strictly worse than the rebalanced one under
+    # the degraded model
+    sub, live = ctl.current_problem()
+    mk_new, _ = heuristics.evaluate(sub, out[live])
+    mk_stale, _ = heuristics.evaluate(sub, base[live])
+    assert mk_new <= mk_stale + 1e-9
+
+
+def test_restore_and_scale_up():
+    ctl = ElasticController(_problem(), cost_cap=None)
+    ctl.fail("a")
+    alloc = ctl.restore("a")
+    assert alloc.shape[0] == 4
+    p = ctl.problem
+    alloc2 = ctl.scale_up(p.beta[0] * 0.5, p.gamma[0], 60.0, 0.02, "turbo")
+    assert alloc2.shape[0] == 5
+    # the faster new platform takes some share
+    assert alloc2[4].sum() > 0

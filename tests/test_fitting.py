@@ -1,0 +1,50 @@
+"""WLS fitting + the paper's Fig. 2 model-error criterion."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fitting, iaas
+from repro.pricing import simulate
+from repro.pricing import tasks as taskgen
+
+
+def test_wls_exact_recovery_noiseless():
+    n = jnp.asarray(np.linspace(1e4, 1e6, 12))
+    beta, gamma = 3.7e-6, 2.5
+    lat = beta * n + gamma
+    b, g = fitting.wls_fit(n, lat)
+    assert abs(float(b) - beta) / beta < 1e-6
+    assert abs(float(g) - gamma) / gamma < 1e-6
+
+
+def test_wls_weights_favour_low_variance():
+    rng = np.random.default_rng(0)
+    n = np.linspace(1e4, 1e6, 40)
+    beta, gamma = 2e-6, 1.0
+    noise = np.where(np.arange(40) % 2 == 0, 0.001, 0.5)
+    lat = beta * n + gamma + rng.normal(0, 1, 40) * noise
+    w = 1.0 / noise**2
+    b_w, _ = fitting.wls_fit(jnp.asarray(n), jnp.asarray(lat), jnp.asarray(w))
+    b_u, _ = fitting.wls_fit(jnp.asarray(n), jnp.asarray(lat))
+    assert abs(float(b_w) - beta) <= abs(float(b_u) - beta) + 1e-12
+
+
+def test_fig2_model_error_within_10pct():
+    """Paper Fig. 2: relative latency prediction error within ~10% for
+    problems many times the benchmark size."""
+    plats = iaas.paper_platforms()
+    tasks = [t.with_paths(int(1e8)) for t in taskgen.generate_tasks(12)]
+    fitted, true = simulate.fit_problem(tasks, plats, seed=3)
+    err = simulate.model_relative_error(fitted, true)
+    assert err.mean() < 0.06
+    assert np.quantile(err, 0.95) < 0.12
+    # extrapolation x4 stays bounded
+    err4 = simulate.model_relative_error(fitted, true, scale=4.0)
+    assert err4.mean() < 0.08
+
+
+def test_fitted_problem_positive():
+    plats = iaas.paper_platforms()[:4]
+    tasks = [t.with_paths(int(1e7)) for t in taskgen.generate_tasks(4)]
+    fitted, _ = simulate.fit_problem(tasks, plats, seed=0)
+    assert (fitted.beta > 0).all()
+    assert (fitted.gamma >= 0).all()

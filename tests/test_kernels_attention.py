@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel: shape/dtype sweep vs the jnp oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref
+
+
+def _qkv(seed, b, hq, hkv, lq, lk, d, dtype):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, lq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, lk, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, lk, d)), dtype)
+    return q, k, v
+
+
+CASES = [
+    # b, hq, hkv, lq, lk, d, causal, window
+    (1, 4, 4, 128, 128, 64, True, 0),
+    (2, 8, 2, 256, 256, 64, True, 0),      # GQA 4:1
+    (1, 4, 1, 128, 128, 128, True, 0),     # MQA
+    (1, 2, 2, 128, 384, 64, True, 0),      # decode-suffix alignment
+    (1, 2, 2, 1, 256, 64, True, 0),        # single-query decode
+    (1, 4, 4, 256, 256, 64, False, 0),     # bidirectional
+    (1, 4, 2, 256, 256, 64, True, 128),    # sliding window
+    (1, 4, 4, 200, 200, 64, True, 0),      # non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(case, dtype):
+    b, hq, hkv, lq, lk, d, causal, window = case
+    if lq % 128 != 0 or lk % 128 != 0:
+        pytest.skip("interpret-mode pallas requires block-aligned shapes")
+    q, k, v = _qkv(hash(case) % 2**31, b, hq, hkv, lq, lk, d, dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_block_size_invariance():
+    q, k, v = _qkv(0, 1, 4, 2, 256, 256, 64, jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128)
+    b = flash_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+def test_fully_masked_rows_are_finite():
+    """window smaller than block: early kv blocks fully masked."""
+    q, k, v = _qkv(1, 1, 2, 2, 256, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=16)
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,70 @@
+"""JAX interior-point LP solver vs the HiGHS oracle."""
+import numpy as np
+import pytest
+
+from repro.core import lp
+
+
+def _random_lp(seed, n=24, meq=6, mineq=10, ub_frac=0.5):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(meq, n))
+    x0 = rng.uniform(0.1, 0.9, size=n)
+    b = a @ x0
+    g = rng.normal(size=(mineq, n))
+    h = g @ x0 + rng.uniform(0.05, 1.0, size=mineq)
+    c = rng.normal(size=n)
+    lb = np.zeros(n)
+    ub = np.full(n, np.inf)
+    ub[rng.random(n) < ub_frac] = rng.uniform(1.0, 3.0)
+    return c, a, b, g, h, lb, ub
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_matches_highs(seed):
+    prob = _random_lp(seed)
+    sol = lp.solve_lp(*prob)
+    ref = lp.scipy_reference_lp(*prob)
+    assert ref.status == 0
+    assert bool(sol.converged), (float(sol.primal_res), float(sol.gap))
+    assert abs(float(sol.obj) - ref.fun) < 1e-5 * (1 + abs(ref.fun))
+
+
+def test_respects_bounds_and_constraints():
+    c, a, b, g, h, lb, ub = _random_lp(3)
+    sol = lp.solve_lp(c, a, b, g, h, lb, ub)
+    x = np.asarray(sol.x)
+    assert (x >= lb - 1e-7).all()
+    assert (x <= ub + 1e-7).all()
+    assert np.abs(a @ x - b).max() < 1e-6
+    assert (g @ x <= h + 1e-6).all()
+
+
+def test_batched_rhs():
+    c, a, b, g, h, lb, ub = _random_lp(5)
+    hs = np.stack([h, h + 0.5, h + 1.0])
+    sols = lp.solve_lp_batched(c, a, b, g, hs, lb, ub)
+    objs = np.asarray(sols.obj)
+    # relaxing the rhs can only improve (reduce) the optimum
+    assert objs[1] <= objs[0] + 1e-7
+    assert objs[2] <= objs[1] + 1e-7
+    for i, h_i in enumerate(hs):
+        ref = lp.scipy_reference_lp(c, a, b, g, h_i, lb, ub)
+        assert abs(objs[i] - ref.fun) < 1e-5 * (1 + abs(ref.fun))
+
+
+def test_node_lp_shape_roundtrip():
+    from repro.core.problem import AllocationProblem
+    rng = np.random.default_rng(0)
+    mu, tau = 4, 6
+    p = AllocationProblem(rng.uniform(1e-6, 1e-4, (mu, tau)),
+                          rng.uniform(0.1, 5.0, (mu, tau)),
+                          rng.uniform(1e5, 1e7, tau),
+                          rng.uniform(60, 600, mu),
+                          rng.uniform(0.01, 0.1, mu))
+    node = p.node_lp(cost_cap=100.0)
+    sol = lp.solve_node_lp(node)
+    assert bool(sol.converged)
+    alloc, d, f_l = p.split_node_x(np.asarray(sol.x))
+    assert alloc.shape == (mu, tau)
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-6)
+    assert f_l >= 0

@@ -1,0 +1,88 @@
+"""Structure-exploiting B&B vs the HiGHS oracle on Eq. 4."""
+import numpy as np
+import pytest
+
+from repro.core import heuristics, milp
+from repro.core.problem import AllocationProblem
+
+
+def random_problem(seed, mu=4, tau=6):
+    rng = np.random.default_rng(seed)
+    beta = rng.uniform(1e-6, 2e-5, (mu, tau))
+    gamma = rng.uniform(0.5, 30.0, (mu, tau))
+    n = rng.uniform(1e6, 5e7, tau)
+    rho = rng.choice([60.0, 300.0, 600.0, 3600.0], mu)
+    pi_hour = rng.uniform(0.2, 1.0, mu)
+    pi = pi_hour * rho / 3600.0
+    return AllocationProblem(beta, gamma, n, rho, pi)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_bnb_matches_highs_unconstrained(seed):
+    p = random_problem(seed)
+    r_b = milp.solve_bnb(p, None, node_limit=800, time_limit_s=60)
+    r_h = milp.solve_highs(p, None)
+    assert r_b.alloc is not None and r_h.alloc is not None
+    # both report TRUE-model makespans; B&B must be within 2% of HiGHS
+    assert r_b.makespan <= r_h.makespan * 1.02 + 1e-9, (
+        r_b.makespan, r_h.makespan)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bnb_respects_budget(seed):
+    p = random_problem(seed + 10)
+    c_l = p.single_platform_cost().min()
+    cap = float(c_l * 1.5)
+    r = milp.solve_bnb(p, cap, node_limit=500, time_limit_s=60)
+    assert r.alloc is not None
+    assert r.cost <= cap * (1 + 1e-6)
+    np.testing.assert_allclose(r.alloc.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_infeasible_budget():
+    p = random_problem(2)
+    cap = float(p.single_platform_cost().min()) * 0.01
+    r = milp.solve_bnb(p, cap, node_limit=100, time_limit_s=30)
+    assert r.alloc is None
+    r_h = milp.solve_highs(p, cap)
+    assert r_h.alloc is None
+
+
+def test_lower_bound_sound():
+    p = random_problem(7)
+    r = milp.solve_bnb(p, None, node_limit=800, time_limit_s=60)
+    assert r.lower_bound <= r.makespan * (1 + 1e-6)
+
+
+def test_budget_monotonicity():
+    """More budget can only reduce the optimal makespan."""
+    p = random_problem(11)
+    c_l = float(p.single_platform_cost().min())
+    r_top = milp.solve_bnb(p, None, node_limit=400, time_limit_s=60)
+    caps = np.linspace(c_l, max(r_top.cost, c_l) * 1.2, 4)
+    prev = np.inf
+    for ck in caps[::-1]:        # decreasing budget
+        r = milp.solve_bnb(p, float(ck), node_limit=400, time_limit_s=60)
+        if r.alloc is None:
+            continue
+        assert r.makespan >= prev - 1e-6 or np.isinf(prev) \
+            or r.makespan <= prev * 1.05   # anytime slack
+        prev = min(prev, r.makespan)
+
+
+def test_milp_beats_or_ties_heuristic():
+    """The paper's headline claim, on random instances."""
+    for seed in range(4):
+        p = random_problem(seed + 20, mu=5, tau=8)
+        top = milp.solve_bnb(p, None, node_limit=600, time_limit_s=60)
+        c_u = top.cost
+        for frac in (1.0, 0.6):
+            cap = float(p.single_platform_cost().min()) * (1 - frac) \
+                + c_u * frac
+            r = milp.solve_bnb(p, cap, node_limit=600, time_limit_s=60)
+            h = heuristics.best_heuristic_for_budget(p, cap)
+            if r.alloc is None:
+                continue
+            h_mk = (np.inf if h is None
+                    else heuristics.evaluate(p, h)[0])
+            assert r.makespan <= h_mk * 1.01 + 1e-9

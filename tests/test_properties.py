@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import heuristics, models, pareto
+from repro.core.problem import AllocationProblem
+from repro.optim import compression
+
+
+def problems(max_mu=5, max_tau=7):
+    @st.composite
+    def _p(draw):
+        mu = draw(st.integers(2, max_mu))
+        tau = draw(st.integers(2, max_tau))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        return AllocationProblem(
+            rng.uniform(1e-7, 1e-4, (mu, tau)),
+            rng.uniform(0.01, 20.0, (mu, tau)),
+            rng.uniform(1e5, 1e8, tau),
+            rng.choice([60.0, 600.0, 3600.0], mu),
+            rng.uniform(0.001, 0.5, mu))
+    return _p()
+
+
+@given(problems())
+def test_cost_at_least_unquantised(p):
+    """ceil-quantised billing never bills less than linear time x rate."""
+    rng = np.random.default_rng(0)
+    alloc = rng.dirichlet(np.ones(p.mu), p.tau).T
+    mk, cost = heuristics.evaluate(p, alloc)
+    g = (p.beta_n * alloc + p.gamma * (alloc > 1e-12)).sum(1)
+    linear_cost = (g / p.rho * p.pi).sum()
+    assert cost >= linear_cost - 1e-9
+    assert mk >= g.max() - 1e-9
+
+
+@given(problems())
+def test_single_platform_bounds(p):
+    """Cheapest single platform is a feasible allocation whose cost equals
+    the C_L bound used by the paper."""
+    alloc = heuristics.cheapest_single_platform(p)
+    mk, cost = heuristics.evaluate(p, alloc)
+    assert abs(cost - p.single_platform_cost().min()) < 1e-9
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0)
+
+
+@given(problems())
+def test_proportional_split_valid(p):
+    alloc = heuristics.proportional_split(p)
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-9)
+    assert (alloc >= 0).all()
+
+
+@given(problems())
+def test_makespan_superadditive_under_merge(p):
+    """Splitting work across platforms cannot beat the best platform by
+    more than the sum of their speeds allows: makespan >= total work over
+    total speed (a crude lower bound the models must respect)."""
+    alloc = heuristics.proportional_split(p)
+    mk, _ = heuristics.evaluate(p, alloc)
+    # ideal: all platforms, no setup, perfect split of each task
+    ideal = (1.0 / (1.0 / p.beta_n).sum(axis=0)).sum()
+    assert mk >= ideal - 1e-9
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 100), st.floats(0.1, 100)),
+                min_size=1, max_size=40))
+def test_pareto_filter_properties(pts):
+    costs = np.array([p[0] for p in pts])
+    lats = np.array([p[1] for p in pts])
+    mask = pareto.pareto_filter(costs, lats)
+    assert mask.any()
+    # idempotent
+    mask2 = pareto.pareto_filter(costs[mask], lats[mask])
+    assert mask2.all()
+    # no kept point dominated by another kept point
+    kc, kl = costs[mask], lats[mask]
+    for i in range(len(kc)):
+        dom = (kc <= kc[i]) & (kl <= kl[i]) & ((kc < kc[i]) | (kl < kl[i]))
+        assert not dom.any()
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 64),
+                  elements=st.floats(-100, 100, width=32)))
+def test_int8_quantisation_error_bound(x):
+    xj = jnp.asarray(x)
+    q, s = compression.quantize_int8(xj)
+    err = np.asarray(compression.dequantize_int8(q, s)) - x
+    amax = np.abs(x).max() + 1e-12
+    assert np.abs(err).max() <= amax / 127.0 * 0.500001 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF residual keeps the running sum of compressed grads close to the
+    running sum of true grads (bias does not accumulate)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    ef = compression.ef_init({"g": g_true})
+    total = np.zeros(256)
+    steps = 50
+    for _ in range(steps):
+        q, s, ef = compression.compress_grads({"g": g_true}, ef)
+        total += np.asarray(compression.dequantize_int8(q["g"], s["g"]))
+    drift = np.abs(total - steps * np.asarray(g_true)).max()
+    scale = float(jnp.abs(g_true).max())
+    assert drift <= 2 * scale / 127.0 + 1e-5   # residual bounded, not O(steps)
+
+
+@given(problems())
+def test_node_lp_relaxation_is_lower_bound(p):
+    """LP relaxation objective <= true makespan of any rounded solution."""
+    from repro.core import lp as lpmod
+    node = p.node_lp(cost_cap=None)
+    sol = lpmod.solve_node_lp(node)
+    if not bool(sol.converged):
+        return
+    alloc, _, f_l = p.split_node_x(np.asarray(sol.x))
+    alloc = np.maximum(alloc, 0)
+    alloc /= alloc.sum(axis=0, keepdims=True)
+    mk, _ = heuristics.evaluate(p, alloc)
+    assert f_l <= mk + 1e-6

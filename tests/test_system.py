@@ -1,0 +1,125 @@
+"""End-to-end behaviour tests: the paper's experiment in miniature, plus
+training-loop integration (loss decreases, resume determinism)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics, iaas, milp, pareto
+from repro.pricing import simulate
+from repro.pricing import tasks as taskgen
+
+
+def _mini_experiment(n_tasks=10, n_platforms=8, seed=1):
+    plats = iaas.paper_platforms()[:n_platforms]
+    tasks = [t.with_paths(int(5e7)) for t in taskgen.generate_tasks(
+        n_tasks, seed=seed)]
+    fitted, true = simulate.fit_problem(tasks, plats, seed=seed)
+    return fitted, true
+
+
+def test_paper_claims_qualitative():
+    """Table IV: ILP == heuristic at C_L; ILP strictly better at the
+    median/upper budgets; never worse anywhere."""
+    fitted, true = _mini_experiment()
+    c_l, c_u, top = pareto.cost_bounds(fitted, backend="bnb",
+                                       node_limit=300, time_limit_s=45)
+    budgets = [c_l, 0.5 * (c_l + c_u), max(c_u, c_l)]
+    ratios = []
+    for ck in budgets:
+        r = milp.solve(fitted, cost_cap=float(ck), backend="bnb",
+                       node_limit=300, time_limit_s=45)
+        h = heuristics.best_heuristic_for_budget(fitted, float(ck))
+        assert r.alloc is not None
+        h_mk = np.inf if h is None else heuristics.evaluate(fitted, h)[0]
+        assert r.makespan <= h_mk * 1.01
+        ratios.append(h_mk / r.makespan)
+    assert abs(ratios[0] - 1.0) < 0.05       # equal at the cheapest point
+    assert max(ratios[1:]) > 1.2             # strictly better elsewhere
+
+
+def test_partitions_validate_on_true_models():
+    """Run the fitted-model partitions against ground truth (paper Fig. 3:
+    model curve ~= measured curve; worst case ~12%)."""
+    fitted, true = _mini_experiment(seed=2)
+    c_l, c_u, _ = pareto.cost_bounds(fitted, backend="bnb", node_limit=200,
+                                     time_limit_s=30)
+    ck = 0.5 * (c_l + c_u)
+    r = milp.solve(fitted, cost_cap=float(ck), backend="bnb",
+                   node_limit=200, time_limit_s=30)
+    mk_pred, cost_pred = heuristics.evaluate(fitted, r.alloc)
+    mk_true, cost_true = heuristics.evaluate(true, r.alloc)
+    assert abs(mk_true - mk_pred) / mk_true < 0.15
+    assert abs(cost_true - cost_pred) / max(cost_true, 1e-9) < 0.35
+
+
+def test_heterogeneous_beats_best_single():
+    """Paper: 'a heterogeneous set of platforms can significantly
+    outperform its constituent platforms'."""
+    fitted, _ = _mini_experiment(seed=3)
+    top = milp.solve(fitted, cost_cap=None, backend="bnb", node_limit=300,
+                     time_limit_s=45)
+    best_single = fitted.single_platform_latency().min()
+    assert top.makespan < best_single * 0.7
+
+
+def test_training_loss_decreases_and_resumes(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import ARCHS
+    from repro.data import SyntheticPipeline
+    from repro.models import build_model
+    from repro.models.context import ModelContext
+    from repro.models.params import init_params
+    from repro.optim import AdamWConfig
+    from repro.runtime.train import (TrainConfig, init_train_state,
+                                     make_train_step)
+
+    cfg = ARCHS["internlm2-1.8b"].reduced()
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    tcfg = TrainConfig(optim=AdamWConfig(lr=1e-3), warmup=5, total_steps=50)
+    step_fn = jax.jit(make_train_step(model, ModelContext(), tcfg))
+    state = init_train_state(params, tcfg)
+    pipe = SyntheticPipeline(vocab=cfg.vocab, seq_len=48, global_batch=4)
+    losses = []
+    for s in range(20):
+        state, m = step_fn(state, pipe.batch(s))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(20, state)
+    _, restored = mgr.restore_latest(state)
+    _, m1 = step_fn(state, pipe.batch(20))
+    _, m2 = step_fn(restored, pipe.batch(20))
+    assert float(m1["loss"]) == float(m2["loss"])
+
+
+def test_grad_accumulation_close_to_full_batch():
+    from repro.configs import ARCHS
+    from repro.data import SyntheticPipeline
+    from repro.models import build_model
+    from repro.models.context import ModelContext
+    from repro.models.params import init_params
+    from repro.optim import AdamWConfig
+    from repro.runtime.train import (TrainConfig, init_train_state,
+                                     make_train_step)
+
+    cfg = ARCHS["internlm2-1.8b"].reduced()
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    pipe = SyntheticPipeline(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    batch = pipe.batch(0)
+
+    outs = {}
+    for accum in (1, 2):
+        tcfg = TrainConfig(optim=AdamWConfig(lr=1e-3), warmup=1,
+                           total_steps=10, accum_steps=accum)
+        step_fn = jax.jit(make_train_step(model, ModelContext(), tcfg))
+        state = init_train_state(params, tcfg)
+        state, m = step_fn(state, batch)
+        outs[accum] = (state, float(m["loss"]))
+    assert abs(outs[1][1] - outs[2][1]) < 0.05
+    for a, b in zip(jax.tree.leaves(outs[1][0].params),
+                    jax.tree.leaves(outs[2][0].params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)

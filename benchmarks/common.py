@@ -1,12 +1,23 @@
 """Shared benchmark utilities: timing + the standard experiment setup."""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Tuple
 
 import numpy as np
 
 Row = Tuple[str, float, str]      # (name, us_per_call, derived)
+
+# --smoke (CI) mode: tiny path counts / problem sizes / sweep lengths so the
+# whole suite exercises every code path in a couple of minutes on a CPU
+# runner.  Set by ``python -m benchmarks.run --smoke`` before module import.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def smoke_scaled(full, tiny):
+    """Pick the tiny variant of a benchmark parameter under --smoke."""
+    return tiny if SMOKE else full
 
 
 def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
@@ -22,13 +33,21 @@ def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
 
 def experiment_problem(n_tasks: int = 128, n_platforms: int = 16,
                        seed: int = 1):
-    """The paper's full workload: 128 MC tasks on the Table II cluster."""
+    """The paper's full workload: 128 MC tasks on the Table II cluster.
+
+    Under --smoke the workload shrinks to a handful of tasks/platforms
+    with tiny path counts (same code paths, minutes -> seconds).
+    """
     from repro.core import iaas
     from repro.pricing import simulate
     from repro.pricing import tasks as taskgen
 
+    if SMOKE:
+        n_tasks = min(n_tasks, 8)
+        n_platforms = min(n_platforms, 4)
+    n_paths = int(2e6) if SMOKE else int(2e8)
     plats = iaas.paper_platforms()[:n_platforms]
-    tasks = [t.with_paths(int(2e8)) for t in taskgen.generate_tasks(
+    tasks = [t.with_paths(n_paths) for t in taskgen.generate_tasks(
         n_tasks, seed=seed)]
     fitted, true = simulate.fit_problem(tasks, plats, seed=seed)
     return fitted, true, plats, tasks

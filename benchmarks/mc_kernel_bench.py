@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import Row, timeit
+from benchmarks.common import smoke_scaled, timeit
 from repro.kernels.mc_pricing import BLOCK_PATHS, mc_price_sums
 from repro.kernels.ref import mc_price_sums_ref
 from repro.pricing.options import KIND_IDS, OptionTask
@@ -14,7 +14,8 @@ from repro.pricing.options import KIND_IDS, OptionTask
 
 def run() -> list:
     rows = []
-    cases = [("european_call", 1, 16), ("asian_call", 64, 4)]
+    cases = smoke_scaled([("european_call", 1, 16), ("asian_call", 64, 4)],
+                         [("european_call", 1, 1), ("asian_call", 8, 1)])
     for kind, steps, n_blocks in cases:
         t = OptionTask("b", kind, 100, 100, 0.03, 0.3, 1.0, steps=steps
                        ).with_paths(n_blocks * BLOCK_PATHS)

@@ -1,12 +1,32 @@
 # One function per paper table/figure.  Prints ``name,us_per_call,derived``
 # CSV (one row per measurement) and exits non-zero on any module failure.
+#
+#   python -m benchmarks.run                 # full suite
+#   python -m benchmarks.run --smoke         # tiny CI mode (see common.SMOKE)
+#   python -m benchmarks.run --out bench.csv # also write the CSV to a file
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny path counts / sweep sizes for CI")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV to this path")
+    args = ap.parse_args()
+    if args.out:
+        # fail fast on an unwritable path, not after minutes of benchmarks
+        with open(args.out, "w"):
+            pass
+    if args.smoke:
+        # must precede benchmark imports: common.SMOKE is read at import
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from benchmarks import (fig2_latency_error, fig3_pareto,
                             mc_kernel_bench, solver_bench,
                             table2_platforms, table3_cost_model,
@@ -20,17 +40,25 @@ def main() -> None:
         ("solver", solver_bench),
         ("mc_kernel", mc_kernel_bench),
     ]
-    print("name,us_per_call,derived")
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
     failed = 0
     for name, mod in modules:
         try:
             for row in mod.run():
                 n, us, derived = row
-                print(f"{n},{us:.1f},{derived}")
+                line = f"{n},{us:.1f},{derived}"
+                lines.append(line)
+                print(line, flush=True)
         except Exception:
             failed += 1
             traceback.print_exc()
-            print(f"{name}.FAILED,0,error")
+            line = f"{name}.FAILED,0,error"
+            lines.append(line)
+            print(line, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
     if failed:
         sys.exit(1)
 

@@ -1,18 +1,20 @@
 """Solver micro-benchmarks (beyond-paper): JAX IPM node-LP throughput vs
-HiGHS, and B&B end-to-end, across problem scales."""
+HiGHS, B&B end-to-end, and the headline number for the batched frontier
+engine — a full epsilon-constraint Pareto sweep, serial vs batched."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import Row, experiment_problem, timeit
-from repro.core import lp, milp
+from benchmarks.common import SMOKE, experiment_problem, smoke_scaled, timeit
+from repro.core import lp, milp, pareto
 
 
 def run() -> list:
     rows = []
-    for mu, tau in ((4, 8), (8, 32), (16, 128)):
+    scales = smoke_scaled(((4, 8), (8, 32), (16, 128)), ((4, 8),))
+    for mu, tau in scales:
         fitted, *_ = experiment_problem(tau, mu, seed=5)
         node = fitted.node_lp(cost_cap=float(
             fitted.single_platform_cost().min() * 2))
@@ -25,23 +27,69 @@ def run() -> list:
         rows.append((f"solver.node_lp.{mu}x{tau}.jax_ipm", us_jax,
                      f"iters={int(sol.iters)};converged={bool(sol.converged)}"))
         rows.append((f"solver.node_lp.{mu}x{tau}.highs", us_hi, ""))
+
     # vmapped epsilon-grid LP relaxation sweep (one IPM call, 8 budgets)
     fitted8, *_ = experiment_problem(16, 8, seed=7)
-    import numpy as np
-    from repro.core import pareto as par
+    n_caps = smoke_scaled(8, 3)
     caps = np.linspace(float(fitted8.single_platform_cost().min()),
-                       float(fitted8.single_platform_cost().min()) * 4, 8)
-    us_sweep = timeit(lambda: par.relaxation_frontier(fitted8, caps)[1],
+                       float(fitted8.single_platform_cost().min()) * 4,
+                       n_caps)
+    us_sweep = timeit(lambda: pareto.relaxation_frontier(fitted8, caps)[1],
                       repeats=2, warmup=1)
-    rows.append(("solver.vmapped_eps_sweep.8x16x8caps", us_sweep,
+    rows.append((f"solver.vmapped_eps_sweep.8x16x{n_caps}caps", us_sweep,
                  f"us_per_cap={us_sweep / len(caps):.0f}"))
+
+    # headline: full Pareto sweep, serial B&B per budget point vs the
+    # batched engine (lockstep B&B over one stacked IPM per round)
+    fittedp, *_ = experiment_problem(smoke_scaled(12, 6),
+                                     smoke_scaled(6, 3), seed=4)
+    n_points = smoke_scaled(8, 3)
+    kw = dict(node_limit=smoke_scaled(150, 50),
+              time_limit_s=smoke_scaled(120.0, 30.0))
+    # first (warmup) runs double as the agreement check; timed runs follow
+    # with every jit cache hot for both paths
+    t_ser = pareto.milp_tradeoff(fittedp, n_points=n_points, backend="bnb",
+                                 **kw)
+    us_serial = timeit(lambda: pareto.milp_tradeoff(
+        fittedp, n_points=n_points, backend="bnb", **kw),
+        repeats=1, warmup=0)
+    t_bat = pareto.milp_tradeoff_batched(fittedp, n_points=n_points, **kw)
+    us_batched = timeit(lambda: pareto.milp_tradeoff_batched(
+        fittedp, n_points=n_points, **kw), repeats=1, warmup=0)
+    # agreement over the epsilon-grid points, paired by grid position
+    # (caps come from two independently-computed anchors, so compare with
+    # isclose, not float equality); the unconstrained anchor itself is a
+    # truncation-order-sensitive solve in BOTH engines and is excluded
+    ser = sorted((p.cost_cap, p.makespan) for p in t_ser.points
+                 if p.cost_cap is not None)
+    bat = sorted((p.cost_cap, p.makespan) for p in t_bat.points
+                 if p.cost_cap is not None)
+    pairs = [(ms, mb) for (cs, ms), (cb, mb) in zip(ser, bat)
+             if np.isclose(cs, cb, rtol=1e-3)]
+    rel = float(max((abs(mb - ms) / max(ms, 1e-9) for ms, mb in pairs),
+                    default=np.inf))
+    # the tolerance-relevant direction: how much WORSE the batched engine
+    # ever is (it is frequently better — incumbents propagate)
+    worse = float(max(((mb - ms) / max(ms, 1e-9) for ms, mb in pairs),
+                      default=np.inf))
+    rows.append((f"solver.pareto_sweep.{n_points}pts.serial", us_serial,
+                 f"us_per_point={us_serial / n_points:.0f}"))
+    rows.append((f"solver.pareto_sweep.{n_points}pts.batched", us_batched,
+                 f"us_per_point={us_batched / n_points:.0f};"
+                 f"speedup={us_serial / us_batched:.2f}x;"
+                 f"max_rel_mk_diff={rel:.4f};"
+                 f"batched_worse_by={max(worse, 0.0):.4f}"))
+
     # B&B end-to-end at medium scale
-    fitted, *_ = experiment_problem(32, 8, seed=6)
+    fitted, *_ = experiment_problem(smoke_scaled(32, 8),
+                                    smoke_scaled(8, 3), seed=6)
     cap = float(fitted.single_platform_cost().min() * 2)
     t0 = time.perf_counter()
-    r = milp.solve_bnb(fitted, cap, node_limit=300, time_limit_s=60)
+    r = milp.solve_bnb(fitted, cap, node_limit=smoke_scaled(300, 30),
+                       time_limit_s=smoke_scaled(60, 15))
     wall = time.perf_counter() - t0
-    rows.append(("solver.bnb.8x32", wall * 1e6,
+    tag = "8x32" if not SMOKE else "3x8"
+    rows.append((f"solver.bnb.{tag}", wall * 1e6,
                  f"nodes={r.nodes};nodes_per_s={r.nodes / max(wall, 1e-9):.1f};"
                  f"status={r.status};gap={r.gap:.4f}"))
     return rows

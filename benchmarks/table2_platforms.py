@@ -2,7 +2,7 @@
 (single-platform makespan + billed cost for all 128 tasks)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, experiment_problem, timeit
+from benchmarks.common import experiment_problem
 
 
 def run() -> list:

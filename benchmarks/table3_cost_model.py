@@ -4,7 +4,6 @@ from __future__ import annotations
 
 from repro.core.iaas import TABLE_III, TPU_V5E_CHIP_TCO
 
-from benchmarks.common import Row
 
 
 def run() -> list:

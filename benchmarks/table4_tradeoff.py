@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, experiment_problem, timeit
+from benchmarks.common import experiment_problem, smoke_scaled
 from repro.core import heuristics, milp, pareto
 
 
@@ -39,9 +39,11 @@ def run() -> list:
     rows = []
     # full paper scale via HiGHS (production backend)
     fitted, *_ = experiment_problem(128, 16)
-    rows += _one_backend(fitted, "highs", "full128", time_limit_s=30)
+    rows += _one_backend(fitted, "highs", "full128",
+                         time_limit_s=smoke_scaled(30, 5))
     # JAX B&B at 32 tasks (exact, structure-exploiting)
     fitted32, *_ = experiment_problem(32, 16, seed=2)
-    rows += _one_backend(fitted32, "bnb", "bnb32", node_limit=300,
-                         time_limit_s=45)
+    rows += _one_backend(fitted32, "bnb", "bnb32",
+                         node_limit=smoke_scaled(300, 20),
+                         time_limit_s=smoke_scaled(45, 10))
     return rows

@@ -16,7 +16,7 @@ import os
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import iaas, milp, pareto
+from repro.core import iaas, pareto
 from repro.core.problem import AllocationProblem
 from repro.launch import roofline as rf
 from repro.runtime.elastic import ElasticController

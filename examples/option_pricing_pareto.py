@@ -9,7 +9,6 @@ import argparse
 import csv
 import os
 
-import numpy as np
 
 from repro.core import heuristics, iaas, pareto
 from repro.pricing import simulate

@@ -8,7 +8,7 @@ assigned input-shape set.  Reduced configs for CPU smoke tests come from
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -12,7 +12,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import models
 from repro.core.problem import AllocationProblem
 
 

@@ -9,7 +9,7 @@ quoted $/hour fixes pi.  Table III parameters feed the Eq. 2 TCO model.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 

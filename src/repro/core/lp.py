@@ -14,7 +14,7 @@ batch of right-hand sides (the epsilon-constraint cost grid).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +65,9 @@ def _standardise(c, a_eq, b_eq, g, h, lb, ub) -> _StdForm:
     # shift x' = x - lb
     b_eq2 = b_eq - a_eq @ lb
     h2 = h - g @ lb
-    u = jnp.where(jnp.isfinite(ub), ub - lb, _INF_UB)
+    # variables pinned by lb == ub (e.g. dead-platform allocations in
+    # scenario solves) keep a sliver of interior so the IPM stays finite
+    u = jnp.where(jnp.isfinite(ub), jnp.maximum(ub - lb, 1e-9), _INF_UB)
     a = jnp.block([
         [a_eq, jnp.zeros((m_eq, m_in), a_eq.dtype)],
         [g, jnp.eye(m_in, dtype=g.dtype)],
@@ -95,14 +97,18 @@ def _step_len(v, dv, finite=None):
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters",))
-def _solve_std(a, b, c, u, *, max_iters: int = _MAX_ITERS):
+def _solve_std(a, b, c, u, tol=_TOL, *, max_iters: int = _MAX_ITERS):
+    """``tol`` is a traced scalar (changing it does not recompile): B&B
+    node solves bound at ~1e-7 while reference solves keep 1e-9."""
     m, n = a.shape
     dtype = a.dtype
     has_ub = u < _INF_UB * 0.5
 
-    # -- cold start, interior w.r.t. both bounds
+    # -- cold start, interior w.r.t. both bounds.  The floor must stay
+    # strictly inside (0, u) even for tiny upper bounds (scenario solves
+    # pin dead-platform variables with ub ~ 0), hence min(1e-2, u/4).
     x0 = jnp.where(has_ub, 0.5 * jnp.minimum(u, 2.0), 1.0)
-    x0 = jnp.maximum(x0, 1e-2)
+    x0 = jnp.maximum(x0, jnp.where(has_ub, jnp.minimum(1e-2, 0.25 * u), 1e-2))
     s0 = jnp.where(has_ub, u - x0, 1.0)
     z0 = jnp.ones((n,), dtype)
     w0 = jnp.where(has_ub, 1.0, 0.0)
@@ -166,9 +172,9 @@ def _solve_std(a, b, c, u, *, max_iters: int = _MAX_ITERS):
         # convergence check
         r_p2, r_d2, _ = residuals(x, y, z, w, s)
         mu2 = mu_of(x, z, s, w)
-        done = ((jnp.linalg.norm(r_p2) / b_norm < _TOL)
-                & (jnp.linalg.norm(r_d2) / c_norm < _TOL)
-                & (mu2 < _TOL))
+        done = ((jnp.linalg.norm(r_p2) / b_norm < tol)
+                & (jnp.linalg.norm(r_d2) / c_norm < tol)
+                & (mu2 < tol))
         return (x, y, z, w, s, it + 1, done)
 
     def cond(carry):
@@ -204,23 +210,76 @@ def solve_node_lp(node, *, max_iters: int = _MAX_ITERS) -> LPSolution:
                     node.lb, node.ub, max_iters=max_iters)
 
 
-# Batched variant: same constraint structure, different rhs h (the
-# epsilon-constraint cost grid) and/or bounds.  vmaps the whole IPM.
-def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
-                     *, max_iters: int = _MAX_ITERS):
-    dt = jnp.float64
+# ---------------------------------------------------------------------------
+# Batched engine
+# ---------------------------------------------------------------------------
+# Base (unbatched) ndim of each LP array, in solve_lp argument order.
+_BASE_NDIM = (1, 2, 1, 2, 1, 1, 1)          # c, a_eq, b_eq, g, h, lb, ub
 
-    def one(h):
-        std = _standardise(jnp.asarray(c, dt), jnp.asarray(a_eq, dt),
-                           jnp.asarray(b_eq, dt), jnp.asarray(g, dt),
-                           h, jnp.asarray(lb, dt), jnp.asarray(ub, dt))
-        x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u,
+
+@functools.lru_cache(maxsize=64)
+def _stacked_solver(axes, max_iters: int):
+    """jit(vmap(IPM)) for a given batching pattern; cached so the whole
+    batched sweep compiles exactly once per (pattern, shape)."""
+
+    def one(tol, c, a_eq, b_eq, g, h, lb, ub):
+        std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
+        x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u, tol,
                                            max_iters=max_iters)
         xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
-        return LPSolution(xo, jnp.asarray(c, dt) @ xo, y * std.row_scale,
-                          it, rp, rd, gap)
+        return LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd, gap)
 
-    return jax.vmap(one)(jnp.asarray(h_batch, dt))
+    return jax.jit(jax.vmap(one, in_axes=(None,) + axes))
+
+
+def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
+                     *, max_iters: int = _MAX_ITERS,
+                     tol: float = _TOL) -> LPSolution:
+    """Solve a whole stack of LPs as ONE jitted, vmapped interior-point call.
+
+    Any of the seven arrays may carry a leading batch dimension (detected
+    by ndim); the rest are broadcast.  This is the engine behind both the
+    epsilon-constraint budget sweep (only ``h`` batched) and scenario
+    sweeps (``g``/``h``/``ub`` batched — scenarios perturb the constraint
+    MATRIX, not just the rhs).  All fields of the returned
+    :class:`LPSolution` gain a leading batch axis.
+    """
+    dt = jnp.float64
+    arrs = tuple(jnp.asarray(v, dt) for v in (c, a_eq, b_eq, g, h, lb, ub))
+    axes = tuple(0 if a.ndim == base + 1 else None
+                 for a, base in zip(arrs, _BASE_NDIM))
+    for a, base, ax in zip(arrs, _BASE_NDIM, axes):
+        if ax is None and a.ndim != base:
+            raise ValueError(f"array has ndim {a.ndim}, expected {base} "
+                             f"or {base + 1} (batched)")
+    if not any(ax == 0 for ax in axes):
+        raise ValueError("solve_lp_stacked needs at least one batched array; "
+                         "use solve_lp for a single LP")
+    sizes = {a.shape[0] for a, ax in zip(arrs, axes) if ax == 0}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent batch sizes: {sorted(sizes)}")
+    return _stacked_solver(axes, max_iters)(jnp.asarray(tol, dt), *arrs)
+
+
+def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
+                           tol: float = _TOL) -> LPSolution:
+    """Stack a sequence of same-shape :class:`~repro.core.problem.NodeLP`
+    relaxations (e.g. one per scenario x budget point) and solve them in a
+    single batched IPM call."""
+    nodes = list(nodes)
+    if not nodes:
+        raise ValueError("empty node stack")
+    stacked = [np.stack([np.asarray(getattr(n, f)) for n in nodes])
+               for f in ("c", "a_eq", "b_eq", "g", "h", "lb", "ub")]
+    return solve_lp_stacked(*stacked, max_iters=max_iters, tol=tol)
+
+
+# Back-compat variant: same constraint structure, different rhs h (the
+# epsilon-constraint cost grid).  Thin wrapper over the stacked engine.
+def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
+                     *, max_iters: int = _MAX_ITERS):
+    return solve_lp_stacked(c, a_eq, b_eq, g, h_batch, lb, ub,
+                            max_iters=max_iters)
 
 
 def scipy_reference_lp(c, a_eq, b_eq, g, h, lb, ub):

@@ -94,14 +94,78 @@ def _round_incumbent(problem: AllocationProblem, a: np.ndarray,
 # Branch & bound
 # ---------------------------------------------------------------------------
 
-def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
-              *, node_limit: int = 2000, gap_tol: float = 1e-4,
-              time_limit_s: float = 120.0, prefer_jax: bool = True
-              ) -> MILPResult:
-    t0 = time.monotonic()
-    mu, tau = problem.mu, problem.tau
+def _expand_node(problem: AllocationProblem, nd: dict, x: np.ndarray,
+                 obj: float, cost_cap: Optional[float], heap: list,
+                 counter) -> Tuple[Optional[np.ndarray], float, float]:
+    """Process a solved, un-pruned node: derive an incumbent candidate and
+    push branched children.  Returns the (cand, mk, cost) incumbent
+    candidate (cand is None when rounding/repair fails)."""
+    a, d, _ = problem.split_node_x(x)
+    cand, mk, cost = _round_incumbent(problem, a, cost_cap)
 
-    # Root incumbent from the heuristics (gives us pruning power early).
+    # pick a branch variable: setup binaries first, then quanta
+    free = ~(nd["b0"] | nd["b1"])
+    frac_b = np.where(free, problem.gamma * a * (1.0 - a), 0.0)
+    # only A strictly inside (0,1) matters
+    inside = (a > _FRAC_TOL) & (a < 1 - _FRAC_TOL)
+    frac_b = np.where(inside, frac_b, 0.0)
+    bi, bj = np.unravel_index(int(np.argmax(frac_b)), frac_b.shape)
+    b_score = frac_b[bi, bj]
+
+    d_frac = d - np.floor(d)
+    d_score_vec = problem.pi * np.minimum(d_frac, 1 - d_frac)
+    d_i = int(np.argmax(d_score_vec))
+    d_score = d_score_vec[d_i] if cost_cap is not None else 0.0
+
+    if b_score <= _FRAC_TOL and d_score <= _FRAC_TOL:
+        # relaxation is integral-enough: node is solved exactly
+        return cand, mk, cost
+
+    if b_score >= d_score:
+        for val in (1, 0):
+            child = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                         d_lb=nd["d_lb"].copy(),
+                         d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
+            (child["b1"] if val else child["b0"])[bi, bj] = True
+            heapq.heappush(heap, (obj, next(counter), child))
+    else:
+        lo = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                  d_lb=nd["d_lb"].copy(),
+                  d_ub=(problem.d_max() if nd["d_ub"] is None
+                        else nd["d_ub"].copy()))
+        lo["d_ub"][d_i] = np.floor(d[d_i])
+        hi = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
+                  d_lb=nd["d_lb"].copy(),
+                  d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
+        hi["d_lb"][d_i] = np.ceil(d[d_i])
+        heapq.heappush(heap, (obj, next(counter), lo))
+        heapq.heappush(heap, (obj, next(counter), hi))
+    return cand, mk, cost
+
+
+def _project_to_allocation(problem: AllocationProblem, a: np.ndarray
+                           ) -> np.ndarray:
+    """Project an arbitrary warm-start matrix onto the feasible set
+    (non-negative, every task column summing to 1).  Columns with no
+    mass — e.g. shares stranded on a failed platform — are refilled
+    latency-proportionally; evaluate() silently under-counts unassigned
+    tasks, so an unprojected warm start could fake an incumbent bound."""
+    a = np.maximum(np.asarray(a, dtype=np.float64), 0.0)
+    colsum = a.sum(axis=0)
+    empty = colsum <= 1e-9
+    if empty.any():
+        w = 1.0 / problem.single_platform_latency()
+        a[:, empty] = (w / w.sum())[:, None]
+        colsum = a.sum(axis=0)
+    return a / colsum[None, :]
+
+
+def _seed_incumbent(problem: AllocationProblem, cost_cap: Optional[float],
+                    warm_alloc: Optional[np.ndarray] = None
+                    ) -> Tuple[Optional[np.ndarray], float, float]:
+    """Root incumbent: the heuristic battery, plus the warm-start
+    allocation when given (repaired into budget if it overshoots) — warm
+    starts strengthen the seed, never replace it."""
     incumbent, inc_mk, inc_cost = None, np.inf, np.inf
     if cost_cap is None:
         cand = heuristics.proportional_split(problem)
@@ -111,16 +175,51 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
         h = heuristics.best_heuristic_for_budget(problem, cost_cap)
         if h is not None:
             cand_list.append(h)
+    if warm_alloc is not None:
+        cand_list.append(_project_to_allocation(problem, warm_alloc))
     for cand in cand_list:
         mk, cost = heuristics.evaluate(problem, cand)
+        if cost_cap is not None and cost > cost_cap * (1 + _FEAS_TOL):
+            cand = heuristics.repair_to_budget(problem, cand, cost_cap)
+            if cand is None:
+                continue
+            mk, cost = heuristics.evaluate(problem, cand)
         if (cost_cap is None or cost <= cost_cap * (1 + _FEAS_TOL)) and mk < inc_mk:
             incumbent, inc_mk, inc_cost = cand, mk, cost
+    return incumbent, inc_mk, inc_cost
+
+
+def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
+              *, node_limit: int = 2000, gap_tol: float = 1e-4,
+              time_limit_s: float = 120.0, prefer_jax: bool = True,
+              warm_alloc: Optional[np.ndarray] = None,
+              lower_bound0: Optional[float] = None
+              ) -> MILPResult:
+    """Structure-exploiting branch & bound.
+
+    ``warm_alloc`` seeds the incumbent (e.g. the neighbouring budget
+    point's optimum during a Pareto sweep — repaired into this budget if
+    it overshoots).  ``lower_bound0`` is a known global lower bound, e.g.
+    this cap's entry from the batched LP-relaxation sweep
+    (:func:`repro.core.pareto.relaxation_frontier`); when the warm
+    incumbent already meets it within ``gap_tol`` the solve returns
+    immediately with zero nodes.
+    """
+    t0 = time.monotonic()
+    mu, tau = problem.mu, problem.tau
+
+    incumbent, inc_mk, inc_cost = _seed_incumbent(problem, cost_cap,
+                                                  warm_alloc)
+    lb0 = -np.inf if lower_bound0 is None else float(lower_bound0)
+    if incumbent is not None and inc_mk <= max(lb0, 0.0) * (1 + gap_tol):
+        # warm incumbent already optimal within tolerance: no search needed
+        return MILPResult(incumbent, inc_mk, inc_cost, lb0, "optimal", 0,
+                          "bnb-jax", time.monotonic() - t0)
 
     counter = itertools.count()
     root = dict(b0=np.zeros((mu, tau), bool), b1=np.zeros((mu, tau), bool),
                 d_lb=np.zeros(mu), d_ub=None)
     heap = [(0.0, next(counter), root)]
-    best_lb_closed = np.inf   # min lb among pruned/leaf nodes
     nodes = 0
     status = "optimal"
 
@@ -142,53 +241,14 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
             continue
         if obj >= inc_mk * (1 - gap_tol):
             continue
-        a, d, f_l = problem.split_node_x(x)
-
-        # incumbent from this node's allocation
-        cand, mk, cost = _round_incumbent(problem, a, cost_cap)
+        cand, mk, cost = _expand_node(problem, nd, x, obj, cost_cap,
+                                      heap, counter)
         if cand is not None and mk < inc_mk:
             incumbent, inc_mk, inc_cost = cand, mk, cost
 
-        # pick a branch variable: setup binaries first, then quanta
-        free = ~(nd["b0"] | nd["b1"])
-        frac_b = np.where(free, problem.gamma * a * (1.0 - a), 0.0)
-        # only A strictly inside (0,1) matters
-        inside = (a > _FRAC_TOL) & (a < 1 - _FRAC_TOL)
-        frac_b = np.where(inside, frac_b, 0.0)
-        bi, bj = np.unravel_index(int(np.argmax(frac_b)), frac_b.shape)
-        b_score = frac_b[bi, bj]
-
-        d_frac = d - np.floor(d)
-        d_score_vec = problem.pi * np.minimum(d_frac, 1 - d_frac)
-        d_i = int(np.argmax(d_score_vec))
-        d_score = d_score_vec[d_i] if cost_cap is not None else 0.0
-
-        if b_score <= _FRAC_TOL and d_score <= _FRAC_TOL:
-            # relaxation is integral-enough: node is solved exactly
-            continue
-
-        if b_score >= d_score:
-            for val in (1, 0):
-                child = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
-                             d_lb=nd["d_lb"].copy(),
-                             d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
-                (child["b1"] if val else child["b0"])[bi, bj] = True
-                heapq.heappush(heap, (obj, next(counter), child))
-        else:
-            lo = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
-                      d_lb=nd["d_lb"].copy(),
-                      d_ub=(problem.d_max() if nd["d_ub"] is None
-                            else nd["d_ub"].copy()))
-            lo["d_ub"][d_i] = np.floor(d[d_i])
-            hi = dict(b0=nd["b0"].copy(), b1=nd["b1"].copy(),
-                      d_lb=nd["d_lb"].copy(),
-                      d_ub=None if nd["d_ub"] is None else nd["d_ub"].copy())
-            hi["d_lb"][d_i] = np.ceil(d[d_i])
-            heapq.heappush(heap, (obj, next(counter), lo))
-            heapq.heappush(heap, (obj, next(counter), hi))
-
     open_lb = min((lb for lb, _, _ in heap), default=np.inf)
-    lower = min(open_lb, inc_mk)
+    lower = max(min(open_lb, inc_mk), lb0) if np.isfinite(lb0) \
+        else min(open_lb, inc_mk)
     if incumbent is None:
         return MILPResult(None, np.inf, np.inf, lower,
                           "infeasible" if status == "optimal" else status,
@@ -201,6 +261,181 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
         st = status
     return MILPResult(incumbent, inc_mk, inc_cost, lower, st, nodes,
                       "bnb-jax", time.monotonic() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Lockstep batched B&B across a budget sweep
+# ---------------------------------------------------------------------------
+
+def solve_bnb_sweep(problem: AllocationProblem, caps,
+                    *, node_limit: int = 2000, gap_tol: float = 1e-4,
+                    time_limit_s: float = 120.0,
+                    warm_allocs=None, lower_bounds0=None,
+                    batch_width: Optional[int] = None,
+                    lp_tol: float = 1e-7,
+                    prefer_jax: bool = True) -> list:
+    """Run one B&B tree per budget cap IN LOCKSTEP: each round pops the
+    best open node from every active tree and solves all node relaxations
+    as a single fixed-width batched interior-point call
+    (:func:`repro.core.lp.solve_node_lps_stacked`).  Node shapes are
+    identical across trees, and closed trees are padded out of the batch,
+    so the batched solver compiles exactly once per sweep width.
+
+    Incumbents propagate across trees between rounds: an allocation found
+    by one budget point seeds every other point whose budget it fits
+    (with greedy repair toward tighter budgets), which is what lets most
+    trees close at — or near — the root.
+
+    ``warm_allocs`` / ``lower_bounds0`` (one entry per cap, e.g. from the
+    batched LP-relaxation sweep) seed incumbents and global lower bounds.
+    ``batch_width`` is the stacked-IPM width per round (default
+    ``min(max(2 * n_caps, 8), 64)``): widths beyond the tree count pop
+    several best-first nodes per tree per round, amortising the per-call
+    dispatch over more node solves (standard parallel-B&B staleness
+    applies — bounds within a round are one round old).
+    ``time_limit_s`` covers the whole sweep.  Returns a list of
+    :class:`MILPResult`, one per cap, in input order.
+    """
+    t0 = time.monotonic()
+    caps = [None if c is None else float(c) for c in caps]
+    k = len(caps)
+    if k == 0:
+        return []
+    if any(c is None for c in caps) and not all(c is None for c in caps):
+        # a capless node LP has no budget row, so its shape differs and
+        # the batch could not be stacked
+        raise ValueError("cannot mix cost-capped and uncapped sweeps")
+    if batch_width is None:
+        batch_width = min(max(2 * k, 8), 64)
+    batch_width = max(batch_width, 1)
+    if warm_allocs is None:
+        warm_allocs = [None] * k
+    if lower_bounds0 is None:
+        lower_bounds0 = [None] * k
+    mu, tau = problem.mu, problem.tau
+
+    trees = []
+    for cap, warm, lb0 in zip(caps, warm_allocs, lower_bounds0):
+        inc, mk, cost = _seed_incumbent(problem, cap, warm)
+        tr = dict(cap=cap, heap=[], counter=itertools.count(),
+                  incumbent=inc, inc_mk=mk, inc_cost=cost, nodes=0,
+                  status=None,
+                  lb0=-np.inf if lb0 is None else float(lb0))
+        if inc is not None and mk <= max(tr["lb0"], 0.0) * (1 + gap_tol):
+            tr["status"] = "optimal"
+        else:
+            root = dict(b0=np.zeros((mu, tau), bool),
+                        b1=np.zeros((mu, tau), bool),
+                        d_lb=np.zeros(mu), d_ub=None)
+            tr["heap"] = [(0.0, next(tr["counter"]), root)]
+        trees.append(tr)
+
+    def propagate(mk, cost, cand):
+        """Offer an incumbent to every tree whose budget it (nearly) fits."""
+        for tr in trees:
+            if mk >= tr["inc_mk"]:
+                continue
+            if tr["cap"] is None or cost <= tr["cap"] * (1 + _FEAS_TOL):
+                tr["incumbent"], tr["inc_mk"], tr["inc_cost"] = cand, mk, cost
+            elif mk < tr["inc_mk"] * 0.999:
+                # over budget: greedy repair, but only when the candidate
+                # promises a real improvement (repair is the hot path)
+                fixed = heuristics.repair_to_budget(problem, cand, tr["cap"])
+                if fixed is None:
+                    continue
+                mk2, cost2 = heuristics.evaluate(problem, fixed)
+                if mk2 < tr["inc_mk"]:
+                    tr["incumbent"] = fixed
+                    tr["inc_mk"], tr["inc_cost"] = mk2, cost2
+
+    for tr in trees:
+        if tr["incumbent"] is not None:
+            propagate(tr["inc_mk"], tr["inc_cost"], tr["incumbent"])
+
+    while True:
+        timed_out = time.monotonic() - t0 > time_limit_s
+        for tr in trees:
+            if tr["status"] is not None:
+                continue
+            if timed_out:
+                tr["status"] = "time_limit"
+            elif tr["nodes"] >= node_limit:
+                tr["status"] = "node_limit"
+            elif not tr["heap"]:
+                # children were either never created or all pruned
+                tr["status"] = "optimal"
+        if timed_out:
+            break
+
+        # Fill the fixed batch width best-first across ALL open trees, so
+        # a lone hard tree still explores batch_width nodes per round
+        # instead of 1.
+        popped = []
+        pops = {id(tr): 0 for tr in trees}
+        while len(popped) < batch_width:
+            best = None
+            for tr in trees:
+                if (tr["status"] is not None or not tr["heap"]
+                        or tr["nodes"] + pops[id(tr)] >= node_limit):
+                    continue
+                if best is None or tr["heap"][0][0] < best["heap"][0][0]:
+                    best = tr
+            if best is None:
+                break
+            lb, _, nd = heapq.heappop(best["heap"])
+            if lb >= best["inc_mk"] * (1 - gap_tol):
+                continue
+            pops[id(best)] += 1
+            popped.append((best, nd))
+        if not popped:
+            break
+
+        lps = [problem.node_lp(tr["cap"], nd["b0"], nd["b1"],
+                               nd["d_lb"], nd["d_ub"]) for tr, nd in popped]
+        # fixed batch width: pad with row 0 so jit compiles once per sweep.
+        # lp_tol ~ 1e-7 (vs the 1e-9 reference default): node solves only
+        # need bounding accuracy well inside gap_tol, and the whole batch
+        # iterates until its SLOWEST member converges.
+        batch = lps + [lps[0]] * (batch_width - len(lps))
+        sols = lpmod.solve_node_lps_stacked(batch, tol=lp_tol)
+        xs = np.asarray(sols.x)
+        objs = np.asarray(sols.obj)
+        conv = np.asarray(sols.converged)
+
+        for row, (tr, nd) in enumerate(popped):
+            tr["nodes"] += 1
+            if conv[row]:
+                x, obj, st = xs[row], float(objs[row]), "ok"
+            else:
+                x, obj, st = _solve_node(lps[row], prefer_jax=False)
+            if st == "infeasible":
+                continue
+            if obj >= tr["inc_mk"] * (1 - gap_tol):
+                continue
+            cand, mk, cost = _expand_node(problem, nd, x, obj, tr["cap"],
+                                          tr["heap"], tr["counter"])
+            if cand is not None and mk < tr["inc_mk"]:
+                tr["incumbent"], tr["inc_mk"], tr["inc_cost"] = cand, mk, cost
+                propagate(mk, cost, cand)
+
+    wall = time.monotonic() - t0
+    out = []
+    for tr in trees:
+        open_lb = min((lb for lb, _, _ in tr["heap"]), default=np.inf)
+        lower = min(open_lb, tr["inc_mk"])
+        if np.isfinite(tr["lb0"]):
+            lower = max(lower, tr["lb0"])
+        status = tr["status"] or "optimal"
+        if tr["incumbent"] is None:
+            out.append(MILPResult(None, np.inf, np.inf, lower,
+                                  "infeasible" if status == "optimal"
+                                  else status,
+                                  tr["nodes"], "bnb-jax-sweep", wall))
+        else:
+            out.append(MILPResult(tr["incumbent"], tr["inc_mk"],
+                                  tr["inc_cost"], lower, status,
+                                  tr["nodes"], "bnb-jax-sweep", wall))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@ Procedure (verbatim from the paper):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -81,6 +81,21 @@ def cost_bounds(problem: AllocationProblem, backend: str = "bnb", **kw):
     return min(c_l, c_u), c_u, res
 
 
+def cost_bounds_batched(problem: AllocationProblem, **kw):
+    """:func:`cost_bounds` with the unconstrained solve routed through the
+    batched (width-1 lockstep) B&B — the exploration order matches the
+    serial solver exactly, but every node LP runs as one fully jitted
+    call instead of the eager serial path.  A caller's ``batch_width``
+    (a sweep tuning knob) is ignored here: the anchor always runs at
+    width 1 so its result is engine-independent."""
+    kw = dict(kw)
+    kw.pop("batch_width", None)
+    c_l = float(problem.single_platform_cost().min())
+    res = milp.solve_bnb_sweep(problem, [None], batch_width=1, **kw)[0]
+    c_u = float(res.cost)
+    return min(c_l, c_u), c_u, res
+
+
 def milp_tradeoff(problem: AllocationProblem, n_points: int = 8,
                   backend: str = "bnb", **kw) -> Tradeoff:
     c_l, c_u, top = cost_bounds(problem, backend=backend, **kw)
@@ -101,24 +116,197 @@ def milp_tradeoff(problem: AllocationProblem, n_points: int = 8,
     return Tradeoff(points, c_l, c_u, f"milp-{backend}")
 
 
-def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray):
+def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
+                        *, return_solutions: bool = False):
     """Instant LOWER-BOUND frontier: the LP relaxation of Eq. 4 solved for
     every cost cap in ONE vmapped interior-point call (the epsilon grid
     shares the constraint matrix; only the budget rhs varies).
 
-    Returns (caps, lb_makespans).  Every true (MILP/heuristic) frontier
+    Returns (caps, lb_makespans) — every true (MILP/heuristic) frontier
     point lies on or above this curve — used as the optimality reference
-    in plots and as B&B seed bounds.
+    in plots and as B&B seed bounds.  With ``return_solutions`` the full
+    batched :class:`~repro.core.lp.LPSolution` is appended so callers can
+    warm-start from the relaxed allocations.
     """
     from repro.core import lp as lpmod
     caps = np.asarray(caps, dtype=np.float64)
     node = problem.node_lp(cost_cap=float(caps[0]))
     # cost row is the LAST inequality row by construction
-    h_batch = np.tile(node.h, (len(caps), 1))
+    h_batch = np.tile(np.asarray(node.h), (len(caps), 1))
     h_batch[:, -1] = caps
-    sols = lpmod.solve_lp_batched(node.c, node.a_eq, node.b_eq, node.g,
+    sols = lpmod.solve_lp_stacked(node.c, node.a_eq, node.b_eq, node.g,
                                   h_batch, node.lb, node.ub)
+    if return_solutions:
+        return caps, np.asarray(sols.obj), sols
     return caps, np.asarray(sols.obj)
+
+
+# ---------------------------------------------------------------------------
+# Batched frontier engine (warm-started epsilon-constraint sweep)
+# ---------------------------------------------------------------------------
+
+def warm_candidate(problem: AllocationProblem, cost_cap: Optional[float],
+                   candidates) -> Optional[np.ndarray]:
+    """Best feasible (possibly repaired) incumbent among ``candidates``
+    for a B&B warm start; ``cost_cap=None`` means unconstrained.  Public
+    because runtime callers (e.g. the elastic controller) use it to seed
+    re-solves."""
+    best, best_mk = None, np.inf
+    for cand in candidates:
+        if cand is None:
+            continue
+        cand = milp._project_to_allocation(problem, cand)
+        a, mk, _ = milp._round_incumbent(problem, cand, cost_cap)
+        if a is not None and mk < best_mk:
+            best, best_mk = a, mk
+    return best
+
+
+_warm_candidate = warm_candidate          # internal alias
+
+
+def _warm_sweep(problem: AllocationProblem, caps: np.ndarray,
+                relax_lbs: np.ndarray, relax_allocs, top, **kw
+                ) -> List[TradeoffPoint]:
+    """Solve a whole epsilon grid through the lockstep batched B&B
+    (:func:`repro.core.milp.solve_bnb_sweep`), seeding every budget point
+    from its batched-relaxation entry and the unconstrained optimum."""
+    warm = [_warm_candidate(problem, float(ck),
+                            (top.alloc, relax_allocs[j]))
+            for j, ck in enumerate(caps)]
+    results = milp.solve_bnb_sweep(
+        problem, caps, warm_allocs=warm,
+        lower_bounds0=[float(v) for v in relax_lbs], **kw)
+    return [TradeoffPoint(float(ck), r.makespan, r.cost, r.alloc,
+                          dict(status=r.status, nodes=r.nodes,
+                               lb=r.lower_bound))
+            for ck, r in zip(caps, results) if r.alloc is not None]
+
+
+def milp_tradeoff_batched(problem: AllocationProblem, n_points: int = 8,
+                          backend: str = "bnb", **kw) -> Tradeoff:
+    """Batched counterpart of :func:`milp_tradeoff` (B&B backend only).
+
+    All epsilon-constraint budget points share one jitted, vmapped
+    interior-point relaxation solve; each point's B&B then warm-starts
+    from the batched relaxation (lower bound + rounded allocation) and
+    from its sweep neighbour's incumbent, so most points close at the
+    root with zero nodes.  Results match :func:`milp_tradeoff` within
+    solver tolerance.
+    """
+    if backend != "bnb":
+        return milp_tradeoff(problem, n_points, backend=backend, **kw)
+    c_l, c_u, top = cost_bounds_batched(problem, **kw)
+    caps = np.linspace(c_l, max(c_u, c_l), n_points)
+    _, lbs, sols = relaxation_frontier(problem, caps, return_solutions=True)
+    xs = np.asarray(sols.x)
+    relax_allocs = [problem.split_node_x(xs[k])[0] for k in range(len(caps))]
+    points = _warm_sweep(problem, caps, lbs, relax_allocs, top, **kw)
+    points.append(TradeoffPoint(None, top.makespan, top.cost, top.alloc,
+                                dict(status=top.status, nodes=top.nodes,
+                                     lb=top.lower_bound)))
+    return Tradeoff(points, c_l, c_u, "milp-bnb-batched")
+
+
+# ---------------------------------------------------------------------------
+# Scenario sweeps: one frontier per scenario through one batched solve
+# ---------------------------------------------------------------------------
+
+def _as_scenario_set(scenarios):
+    from repro.core.scenarios import Scenario, ScenarioSet
+    if isinstance(scenarios, ScenarioSet):
+        return scenarios
+    if isinstance(scenarios, Scenario):
+        return ScenarioSet((scenarios,))
+    return ScenarioSet(tuple(scenarios))
+
+
+def _batched_scenario_relaxation(probs, caps_list, dead_masks):
+    """One stacked IPM call across every (scenario, budget) pair.
+
+    Returns (lbs (S, K), relax_allocs (S, K) list-of-lists).  Dead
+    platforms are pinned to zero allocation via the node's variable
+    bounds, not just the latency penalty.
+    """
+    from repro.core import lp as lpmod
+    nodes = []
+    for p, caps, dead in zip(probs, caps_list, dead_masks):
+        b0 = (np.tile(np.asarray(dead, bool)[:, None], (1, p.tau))
+              if dead is not None and np.asarray(dead).any() else None)
+        base = p.node_lp(cost_cap=float(caps[0]), b_fixed0=b0)
+        for ck in caps:
+            h = np.array(base.h)
+            h[-1] = float(ck)
+            nodes.append(base._replace(h=h))
+    sols = lpmod.solve_node_lps_stacked(nodes)
+    s, k = len(probs), len(caps_list[0])
+    lbs = np.asarray(sols.obj).reshape(s, k)
+    xs = np.asarray(sols.x).reshape(s, k, -1)
+    allocs = [[probs[i].split_node_x(xs[i, j])[0] for j in range(k)]
+              for i in range(s)]
+    return lbs, allocs
+
+
+def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
+                                  n_points: int = 8):
+    """LP-relaxation (lower-bound) frontier per scenario, ALL scenarios
+    and budget points solved in a single batched interior-point call.
+
+    Returns ``{scenario_name: (caps, lb_makespans)}``.  This is the
+    cheap path for "how would the frontier move if ..." what-if queries:
+    no branch & bound at all.
+    """
+    scen = _as_scenario_set(scenarios)
+    probs = scen.problems(problem)
+    caps_list = [np.linspace(*_cheap_cost_bounds(p, s.dead), n_points)
+                 for p, s in zip(probs, scen)]
+    lbs, _ = _batched_scenario_relaxation(
+        probs, caps_list, [s.dead for s in scen])
+    return {s.name: (caps_list[i], lbs[i]) for i, s in enumerate(scen)}
+
+
+def scenario_frontiers(problem: AllocationProblem, scenarios,
+                       n_points: int = 8, **kw):
+    """Exact (B&B) Pareto frontier per scenario in one call.
+
+    The relaxations of every (scenario, budget) pair are solved as ONE
+    batched IPM call; each scenario's sweep then runs the warm-started
+    B&B path of :func:`milp_tradeoff_batched`.  Returns
+    ``{scenario_name: Tradeoff}``.
+    """
+    scen = _as_scenario_set(scenarios)
+    probs = scen.problems(problem)
+    bounds = [cost_bounds_batched(p, **kw) for p in probs]
+    caps_list = [np.linspace(c_l, max(c_u, c_l), n_points)
+                 for c_l, c_u, _ in bounds]
+    lbs, relax_allocs = _batched_scenario_relaxation(
+        probs, caps_list, [s.dead for s in scen])
+    out = {}
+    for i, s in enumerate(scen):
+        c_l, c_u, top = bounds[i]
+        points = _warm_sweep(probs[i], caps_list[i], lbs[i],
+                             relax_allocs[i], top, **kw)
+        points.append(TradeoffPoint(None, top.makespan, top.cost, top.alloc,
+                                    dict(status=top.status, nodes=top.nodes,
+                                         lb=top.lower_bound)))
+        out[s.name] = Tradeoff(points, c_l, c_u, "milp-bnb-batched")
+    return out
+
+
+def _cheap_cost_bounds(problem: AllocationProblem, dead=None):
+    """Closed-form budget anchors (no MILP): cheapest single platform to
+    the realised cost of a latency-weighted proportional split.  Dead
+    platforms (scenario failures) are excluded from both anchors."""
+    lat = problem.single_platform_latency()
+    cost = problem.single_platform_cost()
+    alive = np.ones(problem.mu, dtype=bool)
+    if dead is not None and np.asarray(dead).any():
+        alive = ~np.asarray(dead, bool)
+    c_l = float(cost[alive].min())
+    w = np.where(alive, 1.0 / lat, 0.0)
+    split = heuristics.proportional_split(problem, w)
+    _, c_split = heuristics.evaluate(problem, split)
+    return c_l, max(c_l, float(c_split))
 
 
 def heuristic_tradeoff(problem: AllocationProblem, n_points: int = 8

@@ -1,0 +1,214 @@
+"""Scenario generation for frontier sweeps (beyond-paper subsystem).
+
+The paper traces ONE Pareto frontier for one fixed cluster; its companion
+work (arXiv:1505.04417) observes the frontier must be re-traced whenever
+platform characteristics shift.  This module makes that cheap: a
+:class:`Scenario` is a structured perturbation of an
+:class:`~repro.core.problem.AllocationProblem` — spot-price shocks,
+platform degradation/failure, cluster-shape changes, workload-mix shifts —
+and a :class:`ScenarioSet` stacks many of them so
+:func:`repro.core.pareto.scenario_frontiers` can trace a frontier *per
+scenario* through one batched interior-point call.
+
+Every perturbed problem keeps the base (mu, tau) shape, which is what lets
+all scenarios share a single jit-compiled batched solve.  A dead platform
+is kept in the matrices but its latency is scaled by ``DEAD_PENALTY`` so no
+optimiser or heuristic ever allocates to it (and the batched LP path
+additionally pins its allocation variables to zero).
+
+All generators are deterministic under a fixed seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+from repro.core.problem import AllocationProblem
+
+# Multiplier applied to beta/gamma of a dead platform: large enough that a
+# dead platform is never competitive, small enough to keep the node LPs
+# well-conditioned after equilibration.
+DEAD_PENALTY = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A structured perturbation of an allocation problem.
+
+    All scale vectors are multiplicative against the base problem;
+    ``dead`` marks platforms that are unavailable in this scenario.
+    """
+    name: str
+    beta_scale: np.ndarray       # (mu,) >1 = degraded throughput
+    gamma_scale: np.ndarray      # (mu,) setup-time perturbation
+    price_scale: np.ndarray      # (mu,) spot-price multiplier on pi
+    task_scale: np.ndarray       # (tau,) workload-mix multiplier on n
+    dead: np.ndarray             # (mu,) bool — platform unavailable
+
+    def __post_init__(self):
+        for field in ("beta_scale", "gamma_scale", "price_scale",
+                      "task_scale"):
+            arr = np.asarray(getattr(self, field), dtype=np.float64)
+            if (arr <= 0).any():
+                raise ValueError(f"{field} must be strictly positive")
+            object.__setattr__(self, field, arr)
+        object.__setattr__(self, "dead",
+                           np.asarray(self.dead, dtype=bool))
+
+    @classmethod
+    def baseline(cls, problem: AllocationProblem,
+                 name: str = "baseline") -> "Scenario":
+        return cls(name, np.ones(problem.mu), np.ones(problem.mu),
+                   np.ones(problem.mu), np.ones(problem.tau),
+                   np.zeros(problem.mu, dtype=bool))
+
+    def apply(self, problem: AllocationProblem) -> AllocationProblem:
+        """The perturbed problem (same (mu, tau) shape as the base)."""
+        mu, tau = problem.mu, problem.tau
+        if self.beta_scale.shape != (mu,) or self.task_scale.shape != (tau,):
+            raise ValueError(
+                f"scenario {self.name!r} shaped for "
+                f"({self.beta_scale.shape[0]}, {self.task_scale.shape[0]}), "
+                f"problem is ({mu}, {tau})")
+        lat = np.where(self.dead, DEAD_PENALTY, self.beta_scale)
+        return AllocationProblem(
+            problem.beta * lat[:, None],
+            problem.gamma * np.where(self.dead, DEAD_PENALTY,
+                                     self.gamma_scale)[:, None],
+            problem.n * self.task_scale,
+            problem.rho,
+            problem.pi * self.price_scale,
+            problem.platform_names, problem.task_names)
+
+    @property
+    def n_alive(self) -> int:
+        return int((~self.dead).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSet:
+    """An ordered, named collection of scenarios sharing one base shape."""
+    scenarios: Tuple[Scenario, ...]
+
+    def __post_init__(self):
+        names = [s.name for s in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate scenario names: {names}")
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def __iter__(self) -> Iterator[Scenario]:
+        return iter(self.scenarios)
+
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            for s in self.scenarios:
+                if s.name == key:
+                    return s
+            raise KeyError(key)
+        return self.scenarios[key]
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.scenarios)
+
+    def problems(self, base: AllocationProblem) -> List[AllocationProblem]:
+        return [s.apply(base) for s in self.scenarios]
+
+    def extended(self, *extra: Scenario) -> "ScenarioSet":
+        return ScenarioSet(self.scenarios + tuple(extra))
+
+
+# ---------------------------------------------------------------------------
+# Generators — all deterministic under a fixed seed
+# ---------------------------------------------------------------------------
+
+def _ones(problem: AllocationProblem):
+    return (np.ones(problem.mu), np.ones(problem.mu), np.ones(problem.mu),
+            np.ones(problem.tau), np.zeros(problem.mu, dtype=bool))
+
+
+def spot_price_shocks(problem: AllocationProblem, n: int, *, seed: int,
+                      shock_range: Tuple[float, float] = (0.5, 3.0)
+                      ) -> List[Scenario]:
+    """Per-platform spot-market price multipliers (log-uniform)."""
+    rng = np.random.default_rng(seed)
+    lo, hi = shock_range
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        p = np.exp(rng.uniform(np.log(lo), np.log(hi), problem.mu))
+        out.append(Scenario(f"price_shock_{k}", b, g, p, t, d))
+    return out
+
+
+def platform_degradations(problem: AllocationProblem, n: int, *, seed: int,
+                          slow_range: Tuple[float, float] = (1.2, 4.0),
+                          p_degrade: float = 0.5, p_fail: float = 0.15
+                          ) -> List[Scenario]:
+    """Straggler / failure scenarios: each platform independently degrades
+    (beta multiplied into ``slow_range``) or dies outright.  At least one
+    platform is always kept alive."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        roll = rng.random(problem.mu)
+        d = roll < p_fail
+        degraded = (~d) & (roll < p_fail + p_degrade)
+        b = np.where(degraded,
+                     rng.uniform(*slow_range, problem.mu), 1.0)
+        if d.all():
+            d[int(rng.integers(problem.mu))] = False
+        out.append(Scenario(f"degrade_{k}", b, g, p, t, d))
+    return out
+
+
+def cluster_shapes(problem: AllocationProblem, n: int, *, seed: int,
+                   min_alive: int = 2) -> List[Scenario]:
+    """Cluster-shape perturbations: random subsets of the platform pool
+    (elastic scale-down / partial-availability shapes)."""
+    rng = np.random.default_rng(seed)
+    min_alive = min(min_alive, problem.mu)
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        n_alive = int(rng.integers(min_alive, problem.mu + 1))
+        alive = rng.choice(problem.mu, size=n_alive, replace=False)
+        d = np.ones(problem.mu, dtype=bool)
+        d[alive] = False
+        out.append(Scenario(f"shape_{k}", b, g, p, t, d))
+    return out
+
+
+def workload_mix_shifts(problem: AllocationProblem, n: int, *, seed: int,
+                        mix_range: Tuple[float, float] = (0.5, 2.0)
+                        ) -> List[Scenario]:
+    """Workload-mix perturbations: per-task work-unit multipliers."""
+    rng = np.random.default_rng(seed)
+    lo, hi = mix_range
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        t = np.exp(rng.uniform(np.log(lo), np.log(hi), problem.tau))
+        out.append(Scenario(f"mix_shift_{k}", b, g, p, t, d))
+    return out
+
+
+def standard_suite(problem: AllocationProblem, *, seed: int = 0,
+                   n_each: int = 2,
+                   include_baseline: bool = True) -> ScenarioSet:
+    """The default scenario battery: baseline + ``n_each`` of every
+    generator family, with decorrelated per-family seeds."""
+    scen: List[Scenario] = []
+    if include_baseline:
+        scen.append(Scenario.baseline(problem))
+    scen += spot_price_shocks(problem, n_each, seed=seed + 1)
+    scen += platform_degradations(problem, n_each, seed=seed + 2)
+    scen += cluster_shapes(problem, n_each, seed=seed + 3)
+    scen += workload_mix_shifts(problem, n_each, seed=seed + 4)
+    return ScenarioSet(tuple(scen))

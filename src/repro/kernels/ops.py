@@ -11,7 +11,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mc_pricing as _mc

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.kernels import philox
 from repro.kernels.mc_pricing import BLOCK_PATHS
-from repro.pricing.options import KIND_IDS, N_PARAM_COLS
+from repro.pricing.options import KIND_IDS
 
 
 @functools.partial(jax.jit, static_argnames=("kind_id", "steps", "n_blocks",

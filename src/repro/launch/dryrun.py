@@ -19,7 +19,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, cell_is_supported
 from repro.launch import roofline as rf

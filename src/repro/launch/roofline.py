@@ -17,11 +17,9 @@ algorithmic factor accounts for ring-schedule traffic:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
-import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -5,19 +5,16 @@ values for the step function of the cell's kind — nothing is allocated.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import build_model
 from repro.models.context import ModelContext
 from repro.models.params import abstract_params, param_shardings
-from repro.optim import AdamWConfig
 from repro.runtime import sharding as shard_rules
 from repro.runtime.train import TrainConfig, TrainState
 

@@ -11,7 +11,6 @@ levers are flags, so a cluster job is e.g.:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -19,8 +18,7 @@ import jax
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, SHAPES
 from repro.data import SyntheticPipeline
-from repro.launch import specs as sp
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.models.params import init_params, param_shardings
 from repro.optim import AdamWConfig

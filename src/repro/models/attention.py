@@ -10,11 +10,10 @@ dynamic_update_slice — production serving semantics, not concat.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops as kops
 from repro.models import layers

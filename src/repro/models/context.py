@@ -7,7 +7,7 @@ single-device smoke-test context.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

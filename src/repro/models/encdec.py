@@ -7,15 +7,13 @@ self-attn KV cache + cross-attention onto the encoder memory.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention, layers
-from repro.models.params import P
-from repro.models.transformer import KVCache, _maybe_remat, _scan, _stack_defs
+from repro.models.transformer import _maybe_remat, _scan, _stack_defs
 
 
 class EncDecCache(NamedTuple):

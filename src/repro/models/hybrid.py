@@ -9,14 +9,12 @@ MODEL_FLOPS / HLO_FLOPs roofline ratio.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention, layers, ssm
-from repro.models.params import P
 from repro.models.transformer import _maybe_remat, _scan, _stack_defs
 
 

@@ -20,7 +20,6 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.params import P
 

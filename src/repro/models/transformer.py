@@ -9,9 +9,7 @@ unstacked before the scanned MoE stack.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,6 @@ group; see `engine.py`):
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Tuple
 
 import numpy as np
 

@@ -13,8 +13,7 @@ paper's methodology: models in, partitions out, then validated by
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np

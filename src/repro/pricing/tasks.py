@@ -10,7 +10,7 @@ from typing import List, Sequence
 
 import numpy as np
 
-from repro.pricing.options import KIND_IDS, OptionTask
+from repro.pricing.options import OptionTask
 
 ACCURACY_TARGET = 0.001     # dollars, paper §IV.A.1
 PILOT_PATHS = 8192

@@ -21,12 +21,11 @@ MILP-optimal post-failure rebalancing instead of naive even re-splits.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import heuristics, milp
+from repro.core import heuristics, milp, pareto
 from repro.core.problem import AllocationProblem
 
 
@@ -50,6 +49,53 @@ class ElasticController:
             (self.problem.platform_names or
              [f"p{i}" for i in range(self.problem.mu)])}
         self._alloc: Optional[np.ndarray] = None
+        self._scenario_frontiers: Dict[str, "pareto.Tradeoff"] = {}
+
+    # ------------------------------------------------------------------
+    def presolve_scenarios(self, scenario_set=None, n_points: int = 6,
+                           **kw) -> Dict[str, "pareto.Tradeoff"]:
+        """Precompute a Pareto frontier per anticipated scenario through
+        the batched engine (one stacked IPM call for every
+        scenario x budget relaxation).  The cached frontiers give instant
+        contingency plans and warm starts for post-event re-solves."""
+        if scenario_set is None:
+            from repro.core import scenarios
+            scenario_set = scenarios.standard_suite(self.problem, seed=0)
+        self._scenario_frontiers = pareto.scenario_frontiers(
+            self.problem, scenario_set, n_points, **kw)
+        return self._scenario_frontiers
+
+    def scenario_plan(self, name: str) -> Optional[np.ndarray]:
+        """Best presolved allocation for ``name`` within the controller's
+        budget (the fastest cached frontier point that fits)."""
+        tr = self._scenario_frontiers.get(name)
+        if tr is None:
+            return None
+        best, best_mk = None, np.inf
+        for p in tr.points:
+            if self.cost_cap is not None and p.cost > self.cost_cap * (1 + 1e-9):
+                continue
+            if p.makespan < best_mk:
+                best, best_mk = p.alloc, p.makespan
+        return best
+
+    def _project_live(self, alloc: np.ndarray, live: List[int]
+                      ) -> np.ndarray:
+        """Restrict a full-pool allocation to live platforms, with shares
+        stranded on dead platforms redistributed latency-proportionally."""
+        warm = np.array(np.asarray(alloc, dtype=np.float64)[live])
+        missing = 1.0 - warm.sum(axis=0)
+        if (missing > 1e-9).any():
+            lat = (self.problem.beta_n + self.problem.gamma)[live].sum(axis=1)
+            w = (1.0 / lat) / (1.0 / lat).sum()
+            warm = warm + np.maximum(missing, 0.0)[None, :] * w[:, None]
+        return warm
+
+    def _warm_candidate(self, live: List[int]) -> Optional[np.ndarray]:
+        """Previous allocation projected onto the live platforms."""
+        if self._alloc is None or self._alloc.shape[0] != self.problem.mu:
+            return None          # no solve yet, or the pool was resized
+        return self._project_live(self._alloc, live)
 
     # ------------------------------------------------------------------
     def current_problem(self) -> Tuple[AllocationProblem, List[int]]:
@@ -67,10 +113,36 @@ class ElasticController:
             tuple(names[i] for i in live), p.task_names)
         return sub, live
 
-    def solve(self, **kw) -> np.ndarray:
+    def solve(self, scenario_hint: Optional[str] = None, **kw) -> np.ndarray:
+        """Re-solve the allocation for the current health state.
+
+        With the B&B backend the re-solve goes through the batched warm
+        path: the previous allocation (projected onto live platforms) and
+        any presolved ``scenario_hint`` plan seed the incumbent, and one
+        jitted LP relaxation supplies the root lower bound — on a benign
+        health event the B&B typically closes at the root with no search.
+        """
         sub, live = self.current_problem()
-        res = milp.solve(sub, cost_cap=self.cost_cap, backend=self.backend,
-                         **kw)
+        if self.backend == "bnb":
+            cands = [self._warm_candidate(live)]
+            if scenario_hint is not None:
+                plan = self.scenario_plan(scenario_hint)
+                if plan is not None:
+                    cands.append(self._project_live(plan, live))
+            warm = pareto.warm_candidate(sub, self.cost_cap, cands)
+            lb0 = None
+            try:
+                from repro.core import lp as lpmod
+                sol = lpmod.solve_node_lp(sub.node_lp(self.cost_cap))
+                if bool(sol.converged):
+                    lb0 = float(sol.obj)
+            except Exception:
+                lb0 = None
+            res = milp.solve(sub, cost_cap=self.cost_cap, backend="bnb",
+                             warm_alloc=warm, lower_bound0=lb0, **kw)
+        else:
+            res = milp.solve(sub, cost_cap=self.cost_cap,
+                             backend=self.backend, **kw)
         if res.alloc is None:
             # budget unsatisfiable after failures -> fall back to fastest
             # feasible (cheapest platform) and surface the violation

@@ -6,9 +6,8 @@ one new token against a seq_len-deep cache, cache updated in place
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.context import ModelContext

@@ -8,7 +8,7 @@ Single place that decides the parallelism layout:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import numpy as np

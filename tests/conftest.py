@@ -1,15 +1,18 @@
 import os
-import sys
 
 # Tests must see the real device count (1 CPU) — the dry-run driver sets
 # its own XLA_FLAGS in a subprocess.  Keep hypothesis deadlines off (CPU
 # jit compiles inside properties).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import hypothesis
-
-hypothesis.settings.register_profile(
-    "repro", deadline=None, max_examples=25,
-    suppress_health_check=[hypothesis.HealthCheck.too_slow,
-                           hypothesis.HealthCheck.data_too_large])
-hypothesis.settings.load_profile("repro")
+try:
+    import hypothesis
+except ImportError:          # bare jax+scipy environment: skip property tests
+    hypothesis = None
+    collect_ignore = ["test_properties.py", "test_philox.py"]
+else:
+    hypothesis.settings.register_profile(
+        "repro", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                               hypothesis.HealthCheck.data_too_large])
+    hypothesis.settings.load_profile("repro")

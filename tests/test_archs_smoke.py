@@ -102,7 +102,7 @@ def test_prefill_decode_matches_forward(arch):
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_param_defs_valid(arch):
-    from repro.models.params import n_params, tree_map_p
+    from repro.models.params import n_params
     cfg = ARCHS[arch]
     model = build_model(cfg)
     defs = model.param_defs()

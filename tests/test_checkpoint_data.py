@@ -1,5 +1,4 @@
 """Checkpoint manager + data pipeline: fault-tolerance contracts."""
-import json
 import os
 
 import numpy as np

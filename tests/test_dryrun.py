@@ -5,12 +5,10 @@ set before jax initialises — so the real cells run in a SUBPROCESS; in
 this process we test the pure pieces (HLO collective parsing, roofline
 arithmetic, probe plans, cell support matrix).
 """
-import json
 import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, SHAPES, cell_is_supported

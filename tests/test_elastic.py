@@ -58,3 +58,42 @@ def test_restore_and_scale_up():
     assert alloc2.shape[0] == 5
     # the faster new platform takes some share
     assert alloc2[4].sum() > 0
+
+
+def test_warm_resolve_matches_cold():
+    """The batched warm path (previous alloc + relaxation bound) must not
+    degrade the re-solve after a failure."""
+    ctl_warm = ElasticController(_problem(), cost_cap=None)
+    ctl_warm.solve(node_limit=200, time_limit_s=20)
+    warm = ctl_warm.fail("a")
+
+    ctl_cold = ElasticController(_problem(), cost_cap=None)
+    ctl_cold.health["a"].alive = False
+    cold = ctl_cold.solve(node_limit=200, time_limit_s=20)
+
+    sub, live = ctl_warm.current_problem()
+    mk_warm, _ = heuristics.evaluate(sub, warm[live])
+    mk_cold, _ = heuristics.evaluate(sub, cold[live])
+    assert mk_warm <= mk_cold * 1.01 + 1e-9
+
+
+def test_presolve_scenarios_and_plan():
+    from repro.core import scenarios
+
+    prob = _problem()
+    ctl = ElasticController(prob, cost_cap=None)
+    suite = scenarios.ScenarioSet((
+        scenarios.Scenario.baseline(prob),
+        scenarios.platform_degradations(prob, 1, seed=3)[0],
+    ))
+    fronts = ctl.presolve_scenarios(suite, n_points=3, node_limit=60,
+                                    time_limit_s=20)
+    assert set(fronts) == set(suite.names)
+    plan = ctl.scenario_plan("baseline")
+    assert plan is not None
+    np.testing.assert_allclose(plan.sum(axis=0), 1.0, atol=1e-6)
+    assert ctl.scenario_plan("missing") is None
+    # a presolved hint is accepted by the re-solve path
+    alloc = ctl.solve(scenario_hint="baseline", node_limit=60,
+                      time_limit_s=20)
+    np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-6)

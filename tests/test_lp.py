@@ -52,6 +52,71 @@ def test_batched_rhs():
         assert abs(objs[i] - ref.fun) < 1e-5 * (1 + abs(ref.fun))
 
 
+def test_stacked_all_arrays_batched():
+    """Full stacking: every LP in the batch has its own (c, g, h, ...) —
+    the scenario-sweep case — and each must match its serial solve."""
+    probs = [_random_lp(seed) for seed in (11, 12, 13)]
+    stacked = [np.stack(arrs) for arrs in zip(*probs)]
+    sols = lp.solve_lp_stacked(*stacked)
+    for i, prob in enumerate(probs):
+        ref = lp.scipy_reference_lp(*prob)
+        assert ref.status == 0
+        assert abs(float(sols.obj[i]) - ref.fun) < 1e-5 * (1 + abs(ref.fun))
+
+
+def test_stacked_broadcasts_shared_arrays():
+    c, a, b, g, h, lb, ub = _random_lp(7)
+    hs = np.stack([h, h + 0.25, h + 0.75, h + 2.0])
+    sols = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub)
+    serial = [lp.solve_lp(c, a, b, g, h_i, lb, ub) for h_i in hs]
+    for i, s in enumerate(serial):
+        assert abs(float(sols.obj[i]) - float(s.obj)) < 1e-6 * (
+            1 + abs(float(s.obj)))
+
+
+def test_stacked_rejects_bad_batches():
+    c, a, b, g, h, lb, ub = _random_lp(8)
+    with pytest.raises(ValueError):
+        lp.solve_lp_stacked(c, a, b, g, h, lb, ub)     # nothing batched
+    with pytest.raises(ValueError):
+        lp.solve_lp_stacked(c, a, b, g, np.stack([h, h]),
+                            np.stack([lb, lb, lb]), ub)  # 2 vs 3
+
+
+def test_stacked_node_lps():
+    from repro.core.problem import AllocationProblem
+    rng = np.random.default_rng(1)
+    mu, tau = 3, 4
+    nodes = []
+    for k in range(3):
+        p = AllocationProblem(rng.uniform(1e-6, 1e-4, (mu, tau)),
+                              rng.uniform(0.1, 5.0, (mu, tau)),
+                              rng.uniform(1e5, 1e7, tau),
+                              rng.uniform(60, 600, mu),
+                              rng.uniform(0.01, 0.1, mu))
+        nodes.append((p, p.node_lp(cost_cap=50.0 + 10 * k)))
+    sols = lp.solve_node_lps_stacked([n for _, n in nodes])
+    for i, (p, node) in enumerate(nodes):
+        single = lp.solve_node_lp(node)
+        assert bool(single.converged)
+        assert abs(float(sols.obj[i]) - float(single.obj)) < 1e-6 * (
+            1 + abs(float(single.obj)))
+
+
+def test_pinned_variable_upper_bounds():
+    """ub == lb == 0 (dead-platform pinning) must stay finite and solve."""
+    c, a, b, g, h, lb, ub = _random_lp(9, ub_frac=0.0)
+    # pin a variable that the equality system can live without
+    ub = np.array(ub)
+    ub[0] = 0.0
+    ref = lp.scipy_reference_lp(c, a, b, g, h, lb, ub)
+    sol = lp.solve_lp(c, a, b, g, h, lb, ub)
+    assert np.isfinite(float(sol.obj))
+    if ref.status == 0:
+        assert abs(float(sol.obj) - ref.fun) < 1e-4 * (1 + abs(ref.fun))
+        assert float(sol.x[0]) < 1e-6
+
+
 def test_node_lp_shape_roundtrip():
     from repro.core.problem import AllocationProblem
     rng = np.random.default_rng(0)

@@ -86,3 +86,108 @@ def test_milp_beats_or_ties_heuristic():
             h_mk = (np.inf if h is None
                     else heuristics.evaluate(p, h)[0])
             assert r.makespan <= h_mk * 1.01 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Warm starts and the lockstep batched sweep
+# ---------------------------------------------------------------------------
+
+def test_warm_start_does_not_change_answer():
+    p = random_problem(30)
+    cap = float(p.single_platform_cost().min() * 2)
+    cold = milp.solve_bnb(p, cap, node_limit=400, time_limit_s=60)
+    assert cold.alloc is not None
+    warm = milp.solve_bnb(p, cap, node_limit=400, time_limit_s=60,
+                          warm_alloc=cold.alloc,
+                          lower_bound0=cold.lower_bound)
+    assert warm.alloc is not None
+    assert warm.makespan <= cold.makespan * (1 + 1e-6)
+    assert warm.cost <= cap * (1 + 1e-6)
+
+
+def test_warm_start_with_tight_bound_closes_at_root():
+    p = random_problem(31)
+    cap = float(p.single_platform_cost().min() * 2)
+    cold = milp.solve_bnb(p, cap, node_limit=400, time_limit_s=60)
+    assert cold.alloc is not None
+    warm = milp.solve_bnb(p, cap, node_limit=400, time_limit_s=60,
+                          warm_alloc=cold.alloc,
+                          lower_bound0=cold.makespan * (1 - 1e-6))
+    assert warm.nodes == 0
+    assert warm.status == "optimal"
+    assert warm.makespan <= cold.makespan * (1 + 1e-6)
+
+
+def test_warm_start_over_budget_is_repaired():
+    p = random_problem(32)
+    cap = float(p.single_platform_cost().min() * 1.2)
+    expensive = milp.solve_bnb(p, None, node_limit=200, time_limit_s=30)
+    r = milp.solve_bnb(p, cap, node_limit=200, time_limit_s=30,
+                       warm_alloc=expensive.alloc)
+    if r.alloc is not None:
+        assert r.cost <= cap * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sweep_matches_serial_bnb(seed):
+    """Lockstep batched sweep vs one serial B&B per cap.
+
+    In exact mode (batch_width=1, reference lp_tol) the sweep explores
+    the same tree as the serial solver and must agree tightly; in the
+    default wide/loose mode truncated search may order-diverge by a small
+    amount (and is often better — incumbents propagate)."""
+    p = random_problem(seed + 40)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 4)
+    kw = dict(node_limit=150, time_limit_s=30)
+    exact = milp.solve_bnb_sweep(p, caps, batch_width=1, lp_tol=1e-9, **kw)
+    fast = milp.solve_bnb_sweep(p, caps, **kw)
+    assert len(exact) == len(fast) == len(caps)
+    for ck, re_, rf in zip(caps, exact, fast):
+        rs = milp.solve_bnb(p, float(ck), **kw)
+        if rs.alloc is None:
+            assert re_.alloc is None or re_.cost <= ck * (1 + 1e-6)
+            continue
+        assert re_.alloc is not None and rf.alloc is not None
+        assert re_.makespan <= rs.makespan * (1 + 1e-3) + 1e-9
+        assert rf.makespan <= rs.makespan * 1.02 + 1e-9
+        for rb in (re_, rf):
+            assert rb.cost <= ck * (1 + 1e-6)
+            np.testing.assert_allclose(rb.alloc.sum(axis=0), 1.0,
+                                       atol=1e-6)
+
+
+def test_sweep_unconstrained_matches_serial():
+    p = random_problem(45)
+    rs = milp.solve_bnb(p, None, node_limit=300, time_limit_s=30)
+    rb = milp.solve_bnb_sweep(p, [None], node_limit=300, time_limit_s=30,
+                              batch_width=1, lp_tol=1e-9)[0]
+    assert rb.alloc is not None
+    assert rb.makespan <= rs.makespan * (1 + 1e-3) + 1e-9
+    # default wide/loose mode: small order-divergence allowed
+    rw = milp.solve_bnb_sweep(p, [None], node_limit=300,
+                              time_limit_s=30)[0]
+    assert rw.alloc is not None
+    assert rw.makespan <= rs.makespan * 1.02 + 1e-9
+
+
+def test_sweep_rejects_mixed_caps():
+    p = random_problem(46)
+    with pytest.raises(ValueError):
+        milp.solve_bnb_sweep(p, [None, 10.0])
+
+
+def test_degenerate_warm_alloc_is_projected():
+    """A warm start with unassigned task columns must not poison the
+    incumbent (evaluate() silently under-counts unassigned tasks)."""
+    p = random_problem(33)
+    bad = np.zeros((p.mu, p.tau))
+    bad[0, 0] = 1.0                       # every other task unassigned
+    r = milp.solve_bnb(p, None, node_limit=100, time_limit_s=30,
+                       warm_alloc=bad)
+    assert r.alloc is not None
+    np.testing.assert_allclose(r.alloc.sum(axis=0), 1.0, atol=1e-6)
+    mk, _ = heuristics.evaluate(p, r.alloc)
+    assert abs(mk - r.makespan) <= 1e-6 * max(mk, 1.0)
+    ref = milp.solve_bnb(p, None, node_limit=100, time_limit_s=30)
+    assert r.makespan >= ref.makespan * (1 - 1e-3)

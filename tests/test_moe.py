@@ -1,5 +1,4 @@
 """MoE layer: ragged-dot dispatch path vs the dense reference."""
-import dataclasses
 
 import numpy as np
 import jax

@@ -1,6 +1,5 @@
 """Trade-off generation: epsilon-constraint MILP frontier vs heuristic."""
 import numpy as np
-import pytest
 
 from repro.core import pareto
 from tests.test_milp import random_problem
@@ -47,6 +46,47 @@ def test_hypervolume_simple():
     hv2 = pareto.hypervolume(np.array([1.0, 1.5]), np.array([1.0, 0.5]),
                              2.0, 2.0)
     assert abs(hv2 - 1.25) < 1e-12
+
+
+def test_batched_tradeoff_matches_serial():
+    """The batched engine must agree with the serial sweep within solver
+    tolerance at every budget point (and is allowed to be better, since
+    incumbents propagate across the sweep)."""
+    p = random_problem(7, mu=4, tau=6)
+    kw = dict(node_limit=200, time_limit_s=30)
+    t_ser = pareto.milp_tradeoff(p, n_points=6, backend="bnb", **kw)
+    t_bat = pareto.milp_tradeoff_batched(p, n_points=6, **kw)
+    # pair sweep points by grid position; the two caps grids come from
+    # independently computed anchors, so match with isclose, not float==
+    ser = sorted((pt.cost_cap, pt.makespan) for pt in t_ser.points
+                 if pt.cost_cap is not None)
+    bat = sorted((pt.cost_cap, pt.makespan) for pt in t_bat.points
+                 if pt.cost_cap is not None)
+    pairs = [(cs, ms, mb) for (cs, ms), (cb, mb) in zip(ser, bat)
+             if np.isclose(cs, cb, rtol=1e-3)]
+    assert len(pairs) >= 4
+    # per matched cap: batched never worse than serial beyond solver
+    # tolerance (it may be better — incumbents propagate across the sweep)
+    for c, ms, mb in pairs:
+        assert mb <= ms * (1 + 1e-3) + 1e-9, (c, mb, ms)
+    # and never below the LP relaxation bound at the same budget
+    caps = np.linspace(t_bat.c_lower, max(t_bat.c_upper, t_bat.c_lower), 6)
+    _, lbs = pareto.relaxation_frontier(p, caps)
+    for pt in t_bat.points:
+        if pt.cost_cap is None:
+            continue
+        k = int(np.argmin(np.abs(caps - pt.cost_cap)))
+        assert pt.makespan >= lbs[k] * (1 - 1e-6)
+
+
+def test_batched_tradeoff_points_respect_budget():
+    p = random_problem(11, mu=4, tau=6)
+    t = pareto.milp_tradeoff_batched(p, n_points=5, node_limit=150,
+                                     time_limit_s=30)
+    for pt in t.points:
+        if pt.cost_cap is not None:
+            assert pt.cost <= pt.cost_cap * (1 + 1e-6)
+        np.testing.assert_allclose(pt.alloc.sum(axis=0), 1.0, atol=1e-6)
 
 
 def test_relaxation_frontier_lower_bounds_milp():

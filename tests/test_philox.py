@@ -1,6 +1,9 @@
 """Philox RNG: 16-bit mulhilo correctness (hypothesis) + stream stats."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.kernels import philox

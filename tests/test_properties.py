@@ -1,10 +1,13 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st
 from hypothesis.extra import numpy as hnp
 
-from repro.core import heuristics, models, pareto
+from repro.core import heuristics, pareto
 from repro.core.problem import AllocationProblem
 from repro.optim import compression
 

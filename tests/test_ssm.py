@@ -1,5 +1,4 @@
 """Mamba2 SSD: chunked forward vs naive recurrence; decode consistency."""
-import dataclasses
 
 import numpy as np
 import jax

@@ -2,7 +2,6 @@
 training-loop integration (loss decreases, resume determinism)."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import heuristics, iaas, milp, pareto
 from repro.pricing import simulate

@@ -12,12 +12,24 @@ Row = Tuple[str, float, str]      # (name, us_per_call, derived)
 # --smoke (CI) mode: tiny path counts / problem sizes / sweep lengths so the
 # whole suite exercises every code path in a couple of minutes on a CPU
 # runner.  Set by ``python -m benchmarks.run --smoke`` before module import.
-SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+def is_smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+SMOKE = is_smoke()     # frozen at import for modules that read it once
 
 
 def smoke_scaled(full, tiny):
     """Pick the tiny variant of a benchmark parameter under --smoke."""
-    return tiny if SMOKE else full
+    return tiny if is_smoke() else full
+
+
+def seeded(seed: int) -> int:
+    """Offset a benchmark-local seed by the global --seed flag
+    (``python -m benchmarks.run --seed N``, env ``REPRO_BENCH_SEED``).
+    0 reproduces the historical CI artifacts; any other value re-rolls
+    every problem instance / episode, still fully deterministically."""
+    return seed + int(os.environ.get("REPRO_BENCH_SEED", "0"))
 
 
 def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
@@ -42,10 +54,11 @@ def experiment_problem(n_tasks: int = 128, n_platforms: int = 16,
     from repro.pricing import simulate
     from repro.pricing import tasks as taskgen
 
-    if SMOKE:
+    if is_smoke():
         n_tasks = min(n_tasks, 8)
         n_platforms = min(n_platforms, 4)
-    n_paths = int(2e6) if SMOKE else int(2e8)
+    n_paths = int(2e6) if is_smoke() else int(2e8)
+    seed = seeded(seed)
     plats = iaas.paper_platforms()[:n_platforms]
     tasks = [t.with_paths(n_paths) for t in taskgen.generate_tasks(
         n_tasks, seed=seed)]

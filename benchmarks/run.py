@@ -16,6 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny path counts / sweep sizes for CI")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="global seed offset threaded through every "
+                         "benchmark (reproducible CI artifacts)")
     ap.add_argument("--out", default=None,
                     help="also write the CSV to this path")
     args = ap.parse_args()
@@ -26,7 +29,13 @@ def main() -> None:
     if args.smoke:
         # must precede benchmark imports: common.SMOKE is read at import
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if args.seed is not None:
+        os.environ["REPRO_BENCH_SEED"] = str(args.seed)
 
+    # The spot-market policy benchmark is NOT in this list: it is its own
+    # CLI (``python -m benchmarks.market_bench``) with the same
+    # --smoke/--seed/--out flags, run as a separate CI step so its CSV
+    # lands in its own artifact instead of double-running here.
     from benchmarks import (fig2_latency_error, fig3_pareto,
                             mc_kernel_bench, solver_bench,
                             table2_platforms, table3_cost_model,

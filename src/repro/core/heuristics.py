@@ -25,10 +25,16 @@ def evaluate(problem: AllocationProblem, alloc: np.ndarray):
     return makespan, cost
 
 
-def cheapest_single_platform(problem: AllocationProblem) -> np.ndarray:
+def cheapest_single_platform(problem: AllocationProblem,
+                             allowed: Optional[np.ndarray] = None
+                             ) -> np.ndarray:
     """Paper step 2: the lower cost bound C_L — everything on the platform
-    that finishes the whole workload cheapest."""
-    i = int(np.argmin(problem.single_platform_cost()))
+    that finishes the whole workload cheapest.  ``allowed`` (mu,) bool
+    restricts the choice (dead platforms / pinned fleet slots)."""
+    cost = problem.single_platform_cost()
+    if allowed is not None:
+        cost = np.where(np.asarray(allowed, bool), cost, np.inf)
+    i = int(np.argmin(cost))
     alloc = np.zeros((problem.mu, problem.tau))
     alloc[i, :] = 1.0
     return alloc
@@ -92,11 +98,15 @@ def min_min(problem: AllocationProblem) -> np.ndarray:
 
 
 def repair_to_budget(problem: AllocationProblem, alloc: np.ndarray,
-                     cost_cap: float, max_rounds: Optional[int] = None
+                     cost_cap: float, max_rounds: Optional[int] = None,
+                     allowed: Optional[np.ndarray] = None
                      ) -> Optional[np.ndarray]:
     """Greedy repair: deactivate the platform with the worst marginal
     cost-per-work until the billed cost fits the budget.  Returns None if
-    even the cheapest single platform exceeds the budget."""
+    even the cheapest single platform exceeds the budget.  ``allowed``
+    (mu,) restricts the single-platform fallback to a subset of
+    platforms (the greedy loop itself never adds mass to an inactive
+    row, so an ``alloc`` clean of disallowed rows stays clean)."""
     alloc = np.array(alloc, dtype=np.float64)
     max_rounds = max_rounds or problem.mu
     for _ in range(max_rounds):
@@ -119,7 +129,7 @@ def repair_to_budget(problem: AllocationProblem, alloc: np.ndarray,
         redistribute = alloc[drop][None, :] * (w / w.sum())[:, None]
         alloc = alloc + redistribute
         alloc[drop] = 0.0
-    cheap = cheapest_single_platform(problem)
+    cheap = cheapest_single_platform(problem, allowed)
     _, cost = evaluate(problem, cheap)
     return cheap if cost <= cost_cap * (1 + 1e-9) else None
 

@@ -217,10 +217,22 @@ def solve_node_lp(node, *, max_iters: int = _MAX_ITERS) -> LPSolution:
 _BASE_NDIM = (1, 2, 1, 2, 1, 1, 1)          # c, a_eq, b_eq, g, h, lb, ub
 
 
-@functools.lru_cache(maxsize=64)
+# jit(vmap(IPM)) per batching pattern, plus the set of distinct call
+# signatures (pattern + shapes) seen so far — the basis of
+# :func:`stacked_compile_count`, which lets long-running consumers (the
+# spot-market simulator's replan loop) ASSERT that a fixed-width problem
+# representation really does reuse one compiled solver.
+_STACKED_SOLVERS: dict = {}
+_STACKED_SIGNATURES: set = set()
+
+
 def _stacked_solver(axes, max_iters: int):
     """jit(vmap(IPM)) for a given batching pattern; cached so the whole
     batched sweep compiles exactly once per (pattern, shape)."""
+    key = (axes, max_iters)
+    fn = _STACKED_SOLVERS.get(key)
+    if fn is not None:
+        return fn
 
     def one(tol, c, a_eq, b_eq, g, h, lb, ub):
         std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
@@ -229,7 +241,22 @@ def _stacked_solver(axes, max_iters: int):
         xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
         return LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd, gap)
 
-    return jax.jit(jax.vmap(one, in_axes=(None,) + axes))
+    fn = jax.jit(jax.vmap(one, in_axes=(None,) + axes))
+    _STACKED_SOLVERS[key] = fn
+    return fn
+
+
+def stacked_compile_count() -> int:
+    """Number of distinct compiled variants of the stacked IPM solver in
+    this process.  Uses the jit cache size when the runtime exposes it;
+    otherwise counts distinct call signatures (``jax.jit`` guarantees a
+    cache hit for an identical signature, so both measure recompiles).
+    A fixed-shape caller can assert this stays flat across calls."""
+    sizes = [getattr(fn, "_cache_size", None)
+             for fn in _STACKED_SOLVERS.values()]
+    if sizes and all(s is not None for s in sizes):
+        return sum(int(s()) for s in sizes)
+    return len(_STACKED_SIGNATURES)
 
 
 def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
@@ -258,6 +285,8 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     sizes = {a.shape[0] for a, ax in zip(arrs, axes) if ax == 0}
     if len(sizes) != 1:
         raise ValueError(f"inconsistent batch sizes: {sorted(sizes)}")
+    _STACKED_SIGNATURES.add((axes, max_iters,
+                             tuple(a.shape for a in arrs)))
     return _stacked_solver(axes, max_iters)(jnp.asarray(tol, dt), *arrs)
 
 

@@ -74,15 +74,18 @@ def _solve_node(node, prefer_jax: bool = True):
 
 
 def _round_incumbent(problem: AllocationProblem, a: np.ndarray,
-                     cost_cap: Optional[float]):
-    """Round an LP allocation to a feasible incumbent (true models)."""
+                     cost_cap: Optional[float],
+                     allowed: Optional[np.ndarray] = None):
+    """Round an LP allocation to a feasible incumbent (true models).
+    ``allowed`` keeps the budget repair off pinned/dead platforms."""
     a = np.maximum(a, 0.0)
     a = a / np.maximum(a.sum(axis=0, keepdims=True), 1e-12)
     a[a < 1e-9] = 0.0
     a = a / np.maximum(a.sum(axis=0, keepdims=True), 1e-12)
     mk, cost = heuristics.evaluate(problem, a)
     if cost_cap is not None and cost > cost_cap * (1 + _FEAS_TOL):
-        repaired = heuristics.repair_to_budget(problem, a, cost_cap)
+        repaired = heuristics.repair_to_budget(problem, a, cost_cap,
+                                               allowed=allowed)
         if repaired is None:
             return None, np.inf, np.inf
         a = repaired
@@ -101,7 +104,12 @@ def _expand_node(problem: AllocationProblem, nd: dict, x: np.ndarray,
     push branched children.  Returns the (cand, mk, cost) incumbent
     candidate (cand is None when rounding/repair fails)."""
     a, d, _ = problem.split_node_x(x)
-    cand, mk, cost = _round_incumbent(problem, a, cost_cap)
+    # rows with every setup binary fixed to 0 (root pin or branching)
+    # cannot take work; keep the budget repair off them as well
+    dead_rows = nd["b0"].all(axis=1)
+    cand, mk, cost = _round_incumbent(
+        problem, a, cost_cap,
+        allowed=None if not dead_rows.any() else ~dead_rows)
 
     # pick a branch variable: setup binaries first, then quanta
     free = ~(nd["b0"] | nd["b1"])
@@ -143,30 +151,43 @@ def _expand_node(problem: AllocationProblem, nd: dict, x: np.ndarray,
     return cand, mk, cost
 
 
-def _project_to_allocation(problem: AllocationProblem, a: np.ndarray
+def _project_to_allocation(problem: AllocationProblem, a: np.ndarray,
+                           allowed: Optional[np.ndarray] = None
                            ) -> np.ndarray:
     """Project an arbitrary warm-start matrix onto the feasible set
     (non-negative, every task column summing to 1).  Columns with no
     mass — e.g. shares stranded on a failed platform — are refilled
     latency-proportionally; evaluate() silently under-counts unassigned
-    tasks, so an unprojected warm start could fake an incumbent bound."""
+    tasks, so an unprojected warm start could fake an incumbent bound.
+    ``allowed`` (mu,) restricts the projection to a subset of platforms
+    (pinned/dead rows are zeroed and excluded from refills)."""
     a = np.maximum(np.asarray(a, dtype=np.float64), 0.0)
+    if allowed is not None:
+        a = np.where(np.asarray(allowed, bool)[:, None], a, 0.0)
     colsum = a.sum(axis=0)
     empty = colsum <= 1e-9
     if empty.any():
         w = 1.0 / problem.single_platform_latency()
+        if allowed is not None:
+            w = np.where(allowed, w, 0.0)
         a[:, empty] = (w / w.sum())[:, None]
         colsum = a.sum(axis=0)
     return a / colsum[None, :]
 
 
 def _seed_incumbent(problem: AllocationProblem, cost_cap: Optional[float],
-                    warm_alloc: Optional[np.ndarray] = None
+                    warm_alloc: Optional[np.ndarray] = None,
+                    pinned: Optional[np.ndarray] = None
                     ) -> Tuple[Optional[np.ndarray], float, float]:
     """Root incumbent: the heuristic battery, plus the warm-start
     allocation when given (repaired into budget if it overshoots) — warm
-    starts strengthen the seed, never replace it."""
+    starts strengthen the seed, never replace it.  ``pinned`` is the
+    root's b_fixed0 mask; platforms whose every setup binary is pinned to
+    zero (dead/empty slots) are stripped from every candidate."""
     incumbent, inc_mk, inc_cost = None, np.inf, np.inf
+    allowed = None
+    if pinned is not None:
+        allowed = ~np.asarray(pinned, bool).all(axis=1)
     if cost_cap is None:
         cand = heuristics.proportional_split(problem)
         cand_list = [cand, heuristics.min_min(problem)]
@@ -176,11 +197,15 @@ def _seed_incumbent(problem: AllocationProblem, cost_cap: Optional[float],
         if h is not None:
             cand_list.append(h)
     if warm_alloc is not None:
-        cand_list.append(_project_to_allocation(problem, warm_alloc))
+        cand_list.append(_project_to_allocation(problem, warm_alloc,
+                                                allowed))
     for cand in cand_list:
+        if allowed is not None:
+            cand = _project_to_allocation(problem, cand, allowed)
         mk, cost = heuristics.evaluate(problem, cand)
         if cost_cap is not None and cost > cost_cap * (1 + _FEAS_TOL):
-            cand = heuristics.repair_to_budget(problem, cand, cost_cap)
+            cand = heuristics.repair_to_budget(problem, cand, cost_cap,
+                                               allowed=allowed)
             if cand is None:
                 continue
             mk, cost = heuristics.evaluate(problem, cand)
@@ -193,7 +218,8 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
               *, node_limit: int = 2000, gap_tol: float = 1e-4,
               time_limit_s: float = 120.0, prefer_jax: bool = True,
               warm_alloc: Optional[np.ndarray] = None,
-              lower_bound0: Optional[float] = None
+              lower_bound0: Optional[float] = None,
+              pinned: Optional[np.ndarray] = None
               ) -> MILPResult:
     """Structure-exploiting branch & bound.
 
@@ -203,13 +229,16 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
     this cap's entry from the batched LP-relaxation sweep
     (:func:`repro.core.pareto.relaxation_frontier`); when the warm
     incumbent already meets it within ``gap_tol`` the solve returns
-    immediately with zero nodes.
+    immediately with zero nodes.  ``pinned`` is a (mu, tau) bool mask of
+    setup binaries fixed to 0 at the ROOT (inherited by every node) —
+    dead platforms / empty fleet slots, see
+    :func:`repro.core.scenarios.dead_pin_mask`.
     """
     t0 = time.monotonic()
     mu, tau = problem.mu, problem.tau
 
     incumbent, inc_mk, inc_cost = _seed_incumbent(problem, cost_cap,
-                                                  warm_alloc)
+                                                  warm_alloc, pinned)
     lb0 = -np.inf if lower_bound0 is None else float(lower_bound0)
     if incumbent is not None and inc_mk <= max(lb0, 0.0) * (1 + gap_tol):
         # warm incumbent already optimal within tolerance: no search needed
@@ -217,7 +246,9 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
                           "bnb-jax", time.monotonic() - t0)
 
     counter = itertools.count()
-    root = dict(b0=np.zeros((mu, tau), bool), b1=np.zeros((mu, tau), bool),
+    b0_root = (np.zeros((mu, tau), bool) if pinned is None
+               else np.array(pinned, dtype=bool))
+    root = dict(b0=b0_root, b1=np.zeros((mu, tau), bool),
                 d_lb=np.zeros(mu), d_ub=None)
     heap = [(0.0, next(counter), root)]
     nodes = 0
@@ -273,7 +304,8 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
                     warm_allocs=None, lower_bounds0=None,
                     batch_width: Optional[int] = None,
                     lp_tol: float = 1e-7,
-                    prefer_jax: bool = True) -> list:
+                    prefer_jax: bool = True,
+                    pinned: Optional[np.ndarray] = None) -> list:
     """Run one B&B tree per budget cap IN LOCKSTEP: each round pops the
     best open node from every active tree and solves all node relaxations
     as a single fixed-width batched interior-point call
@@ -289,12 +321,16 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
     ``warm_allocs`` / ``lower_bounds0`` (one entry per cap, e.g. from the
     batched LP-relaxation sweep) seed incumbents and global lower bounds.
     ``batch_width`` is the stacked-IPM width per round (default
-    ``min(max(2 * n_caps, 8), 64)``): widths beyond the tree count pop
-    several best-first nodes per tree per round, amortising the per-call
-    dispatch over more node solves (standard parallel-B&B staleness
-    applies — bounds within a round are one round old).
-    ``time_limit_s`` covers the whole sweep.  Returns a list of
-    :class:`MILPResult`, one per cap, in input order.
+    ``min(max(2 * n_caps, 8), 64)``): each round's batch is refilled by
+    best-bound priority across ALL open trees (a lone hard tree can fill
+    the whole batch), and the solved rows are then processed in
+    best-bound order with incumbents propagating between rows — so a
+    strong incumbent discovered by the best node of a round prunes its
+    weaker batch-mates immediately instead of one round later.
+    ``pinned`` (mu, tau) pins setup binaries to zero at every tree's root
+    (dead platforms / empty fleet slots).  ``time_limit_s`` covers the
+    whole sweep.  Returns a list of :class:`MILPResult`, one per cap, in
+    input order.
     """
     t0 = time.monotonic()
     caps = [None if c is None else float(c) for c in caps]
@@ -316,7 +352,7 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
 
     trees = []
     for cap, warm, lb0 in zip(caps, warm_allocs, lower_bounds0):
-        inc, mk, cost = _seed_incumbent(problem, cap, warm)
+        inc, mk, cost = _seed_incumbent(problem, cap, warm, pinned)
         tr = dict(cap=cap, heap=[], counter=itertools.count(),
                   incumbent=inc, inc_mk=mk, inc_cost=cost, nodes=0,
                   status=None,
@@ -324,11 +360,15 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
         if inc is not None and mk <= max(tr["lb0"], 0.0) * (1 + gap_tol):
             tr["status"] = "optimal"
         else:
-            root = dict(b0=np.zeros((mu, tau), bool),
+            root = dict(b0=(np.zeros((mu, tau), bool) if pinned is None
+                            else np.array(pinned, dtype=bool)),
                         b1=np.zeros((mu, tau), bool),
                         d_lb=np.zeros(mu), d_ub=None)
             tr["heap"] = [(0.0, next(tr["counter"]), root)]
         trees.append(tr)
+
+    allowed_rows = (None if pinned is None
+                    else ~np.asarray(pinned, bool).all(axis=1))
 
     def propagate(mk, cost, cand):
         """Offer an incumbent to every tree whose budget it (nearly) fits."""
@@ -340,7 +380,8 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
             elif mk < tr["inc_mk"] * 0.999:
                 # over budget: greedy repair, but only when the candidate
                 # promises a real improvement (repair is the hot path)
-                fixed = heuristics.repair_to_budget(problem, cand, tr["cap"])
+                fixed = heuristics.repair_to_budget(problem, cand, tr["cap"],
+                                                    allowed=allowed_rows)
                 if fixed is None:
                     continue
                 mk2, cost2 = heuristics.evaluate(problem, fixed)
@@ -402,7 +443,14 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
         objs = np.asarray(sols.obj)
         conv = np.asarray(sols.converged)
 
-        for row, (tr, nd) in enumerate(popped):
+        # Process rows in best-bound order (non-converged rows, which
+        # need an eager HiGHS re-solve for a trusted bound, go last):
+        # incumbents found by the round's strongest nodes then prune the
+        # weaker batch-mates below, instead of going stale for a round.
+        order = sorted(range(len(popped)),
+                       key=lambda r: (not conv[r], float(objs[r])))
+        for row in order:
+            tr, nd = popped[row]
             tr["nodes"] += 1
             if conv[row]:
                 x, obj, st = xs[row], float(objs[row]), "ok"

@@ -229,10 +229,10 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks):
     bounds, not just the latency penalty.
     """
     from repro.core import lp as lpmod
+    from repro.core.scenarios import dead_pin_mask
     nodes = []
     for p, caps, dead in zip(probs, caps_list, dead_masks):
-        b0 = (np.tile(np.asarray(dead, bool)[:, None], (1, p.tau))
-              if dead is not None and np.asarray(dead).any() else None)
+        b0 = dead_pin_mask(dead, p.tau) if dead is not None else None
         base = p.node_lp(cost_cap=float(caps[0]), b_fixed0=b0)
         for ck in caps:
             h = np.array(base.h)

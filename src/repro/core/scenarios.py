@@ -33,6 +33,37 @@ from repro.core.problem import AllocationProblem
 DEAD_PENALTY = 1e6
 
 
+# ---------------------------------------------------------------------------
+# Dead-platform treatment — the ONE place both halves live.  Every consumer
+# (scenario apply, batched scenario relaxations, market slot padding) goes
+# through these two helpers so the latency-penalty and the variable-pinning
+# treatments of an unavailable platform can never diverge.
+# ---------------------------------------------------------------------------
+
+def dead_latency_scale(dead, scale=None) -> np.ndarray:
+    """(mu,) multiplicative latency scale with dead platforms penalised.
+
+    ``scale`` is the healthy-platform multiplier (defaults to ones); dead
+    entries are replaced by :data:`DEAD_PENALTY` so no optimiser or
+    heuristic ever finds an unavailable platform competitive.
+    """
+    dead = np.asarray(dead, dtype=bool)
+    if scale is None:
+        scale = np.ones(dead.shape[0])
+    return np.where(dead, DEAD_PENALTY, np.asarray(scale, dtype=np.float64))
+
+
+def dead_pin_mask(dead, tau: int):
+    """(mu, tau) ``b_fixed0`` mask pinning dead-platform allocation (and
+    setup) variables to zero in LP/B&B solves, or None when nothing is
+    dead.  This is the exact-zero complement of the latency penalty: the
+    penalty keeps heuristics away, the pin keeps solver variables at 0."""
+    dead = np.asarray(dead, dtype=bool)
+    if not dead.any():
+        return None
+    return np.tile(dead[:, None], (1, tau))
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """A structured perturbation of an allocation problem.
@@ -72,15 +103,20 @@ class Scenario:
                 f"scenario {self.name!r} shaped for "
                 f"({self.beta_scale.shape[0]}, {self.task_scale.shape[0]}), "
                 f"problem is ({mu}, {tau})")
-        lat = np.where(self.dead, DEAD_PENALTY, self.beta_scale)
+        lat = dead_latency_scale(self.dead, self.beta_scale)
         return AllocationProblem(
             problem.beta * lat[:, None],
-            problem.gamma * np.where(self.dead, DEAD_PENALTY,
-                                     self.gamma_scale)[:, None],
+            problem.gamma * dead_latency_scale(self.dead,
+                                               self.gamma_scale)[:, None],
             problem.n * self.task_scale,
             problem.rho,
             problem.pi * self.price_scale,
             problem.platform_names, problem.task_names)
+
+    def pin_for(self, problem: AllocationProblem):
+        """(mu, tau) ``b_fixed0`` pin for this scenario's dead platforms
+        (None when all alive) — see :func:`dead_pin_mask`."""
+        return dead_pin_mask(self.dead, problem.tau)
 
     @property
     def n_alive(self) -> int:
@@ -121,6 +157,73 @@ class ScenarioSet:
 
     def extended(self, *extra: Scenario) -> "ScenarioSet":
         return ScenarioSet(self.scenarios + tuple(extra))
+
+
+# ---------------------------------------------------------------------------
+# Slot padding — fixed-width fleets for the spot-market simulator
+# ---------------------------------------------------------------------------
+
+def slot_pad_problem(problem: AllocationProblem, n_slots: int
+                     ) -> Tuple[AllocationProblem, np.ndarray]:
+    """Pad a problem to a fixed fleet width of ``n_slots`` platform rows.
+
+    The padding rows copy the base problem's first platform spec and are
+    NEUTRAL — the dead-platform treatment (latency penalty + variable
+    pin) is applied exactly once, downstream, by composing with a
+    scenario from :func:`slot_pad_scenario` (whose padding slots are
+    marked dead) or by :func:`dead_latency_scale` / :func:`dead_pin_mask`
+    directly.  Every fleet the spot-market simulator sees thus shares one
+    (n_slots, tau) shape, so all replans in an episode hit a single
+    compiled stacked-solver entry.
+
+    Returns ``(padded_problem, empty_mask)`` with ``empty_mask`` (n_slots,)
+    True on the padding rows.
+    """
+    mu = problem.mu
+    if n_slots < mu:
+        raise ValueError(f"n_slots={n_slots} < mu={mu}")
+    empty = np.zeros(n_slots, dtype=bool)
+    empty[mu:] = True
+    pad = n_slots - mu
+    names = problem.platform_names
+    if names is not None:
+        names = tuple(names) + tuple(f"slot{mu + k}" for k in range(pad))
+    padded = AllocationProblem(
+        np.vstack([problem.beta] + [problem.beta[:1]] * pad),
+        np.vstack([problem.gamma] + [problem.gamma[:1]] * pad),
+        problem.n,
+        np.concatenate([problem.rho, np.repeat(problem.rho[:1], pad)]),
+        np.concatenate([problem.pi, np.repeat(problem.pi[:1], pad)]),
+        names, problem.task_names)
+    return padded, empty
+
+
+def slot_pad_scenario(scenario: Scenario, n_slots: int) -> Scenario:
+    """Extend a scenario's per-platform vectors to ``n_slots`` slots, with
+    the padding slots marked dead — the counterpart of
+    :func:`slot_pad_problem` that lets mid-episode arrivals batch with
+    existing scenarios in one stacked solve."""
+    mu = scenario.dead.shape[0]
+    if n_slots < mu:
+        raise ValueError(f"n_slots={n_slots} < mu={mu}")
+    pad = n_slots - mu
+
+    def ext(v, fill=1.0):
+        return np.concatenate([v, np.full(pad, fill)])
+
+    return Scenario(scenario.name, ext(scenario.beta_scale),
+                    ext(scenario.gamma_scale), ext(scenario.price_scale),
+                    scenario.task_scale,
+                    np.concatenate([scenario.dead,
+                                    np.ones(pad, dtype=bool)]))
+
+
+def slot_padded_set(scenarios, n_slots: int) -> ScenarioSet:
+    """Slot-pad every scenario in a set to one fixed fleet width."""
+    if isinstance(scenarios, ScenarioSet):
+        scenarios = scenarios.scenarios
+    return ScenarioSet(tuple(slot_pad_scenario(s, n_slots)
+                             for s in scenarios))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,27 @@
+"""Spot-market event simulator with online replanning policies.
+
+The paper traces one Pareto frontier for one fixed cluster; this package
+treats its premise — platforms rentable by the hour — as a *market*:
+platform kinds arrive and depart mid-flight, spot prices tick, machines
+degrade and recover.  A seed-deterministic event stream
+(:mod:`repro.market.events`) drives a discrete-event simulator
+(:mod:`repro.market.simulator`) whose fleet is a fixed-width platform-slot
+array, so every replanning solve across a whole episode shares one
+compiled stacked-IPM shape.  Online policies
+(:mod:`repro.market.policies`) re-optimise against the stream and are
+scored by regret against a clairvoyant per-interval oracle
+(:mod:`repro.market.metrics`).
+"""
+from repro.market.events import (MarketEpisode, MarketEvent,
+                                 generate_episode, standard_episodes,
+                                 trace_digest)
+from repro.market.simulator import (EpisodeResult, Fleet, PlatformKind,
+                                    catalog_from_problem, run_episode,
+                                    slo_for_episode)
+
+__all__ = [
+    "MarketEpisode", "MarketEvent", "generate_episode",
+    "standard_episodes", "trace_digest",
+    "EpisodeResult", "Fleet", "PlatformKind", "catalog_from_problem",
+    "run_episode", "slo_for_episode",
+]

@@ -1,0 +1,202 @@
+"""Typed spot-market event streams, deterministic under a fixed seed.
+
+An episode is a superposition of Poisson processes over a platform-kind
+catalogue: arrivals of new platform instances (capacity permitting),
+departures/preemptions, spot-price ticks, degradation onsets and
+recoveries.  Generation needs only the *kind names* and capacity — not
+the workload — so the same seed yields a byte-identical trace no matter
+how many jobs later ride on it (see :func:`trace_digest`).
+
+The generator keeps a shadow fleet so every emitted event is applicable
+(departures never empty the fleet, arrivals never exceed
+``max_platforms``, recoveries only target degraded instances).  Draws
+are consumed in a fixed order, so the stream is a pure function of the
+arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Mapping, Sequence, Tuple, Union
+
+import numpy as np
+
+# Event kinds
+ARRIVAL = "arrival"          # new platform instance enters the market
+DEPARTURE = "departure"      # instance preempted / leaves the market
+PRICE_TICK = "price_tick"    # spot price of an instance re-quotes
+DEGRADE = "degrade"          # throughput degradation onset (straggler)
+RECOVER = "recover"          # degradation clears
+
+KINDS = (ARRIVAL, DEPARTURE, PRICE_TICK, DEGRADE, RECOVER)
+
+Payload = Mapping[str, Union[float, int, str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketEvent:
+    """One typed market event.
+
+    ``platform`` is the affected instance name (``<kind>#<uid>``);
+    ``payload`` carries the kind-specific fields: ``kind_index`` for
+    arrivals, ``price_scale`` for price ticks, ``beta_scale`` for
+    degradation onsets/recoveries.
+    """
+    time: float
+    kind: str
+    platform: str
+    payload: Tuple[Tuple[str, float], ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}")
+        object.__setattr__(self, "payload",
+                           tuple(sorted(dict(self.payload).items())))
+
+    def get(self, key: str, default=None):
+        return dict(self.payload).get(key, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketEpisode:
+    """A deterministic event trace over a kind catalogue."""
+    seed: int
+    horizon_s: float
+    kind_names: Tuple[str, ...]
+    max_platforms: int
+    initial: Tuple[Tuple[str, int], ...]   # (instance_name, kind_index)
+    events: Tuple[MarketEvent, ...]
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return format(v, ".12g")
+    return str(v)
+
+
+def trace_digest(episode: MarketEpisode) -> str:
+    """SHA-256 over a canonical serialisation of the episode.
+
+    Two episodes with the same digest carry byte-identical traces — the
+    determinism contract tested by ``tests/test_market.py``.
+    """
+    h = hashlib.sha256()
+    head = "|".join([str(episode.seed), _fmt(episode.horizon_s),
+                     ",".join(episode.kind_names),
+                     str(episode.max_platforms),
+                     ";".join(f"{n}:{k}" for n, k in episode.initial)])
+    h.update(head.encode())
+    for ev in episode.events:
+        line = "|".join([_fmt(ev.time), ev.kind, ev.platform]
+                        + [f"{k}={_fmt(v)}" for k, v in ev.payload])
+        h.update(b"\n" + line.encode())
+    return h.hexdigest()
+
+
+def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
+                     seed: int, n_initial: int = 3,
+                     max_platforms: int = 8,
+                     arrival_rate: float = 2.0,
+                     departure_rate: float = 1.5,
+                     price_rate: float = 3.0,
+                     degrade_rate: float = 1.0,
+                     recover_rate: float = 1.0,
+                     price_sigma: float = 0.4,
+                     degrade_range: Tuple[float, float] = (1.5, 4.0)
+                     ) -> MarketEpisode:
+    """Generate one episode.  Rates are events per ``horizon_s`` (so the
+    expected event count is independent of the horizon's absolute scale).
+
+    The shadow-fleet bookkeeping guarantees applicability: at least one
+    instance stays alive, the fleet never exceeds ``max_platforms``, and
+    recoveries pair with an active degradation.
+    """
+    kind_names = tuple(kind_names)
+    if not kind_names:
+        raise ValueError("empty kind catalogue")
+    if not (0 < n_initial <= max_platforms):
+        raise ValueError("need 0 < n_initial <= max_platforms")
+    rng = np.random.default_rng(seed)
+    k = len(kind_names)
+
+    uid = 0
+    fleet = {}        # name -> dict(kind, degraded, price_scale)
+    initial = []
+    for _ in range(n_initial):
+        kind = int(rng.integers(k))
+        name = f"{kind_names[kind]}#{uid}"
+        uid += 1
+        fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0)
+        initial.append((name, kind))
+
+    rates = np.array([arrival_rate, departure_rate, price_rate,
+                      degrade_rate, recover_rate], dtype=np.float64)
+    per_s = rates.sum() / horizon_s
+    cum = np.cumsum(rates / rates.sum())
+
+    events = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / per_s))
+        if t >= horizon_s:
+            break
+        which = int(np.searchsorted(cum, rng.random(), side="right"))
+        kind_name = KINDS[which]
+        alive = sorted(fleet)
+        if kind_name == ARRIVAL:
+            kind = int(rng.integers(k))
+            if len(alive) >= max_platforms:
+                continue
+            name = f"{kind_names[kind]}#{uid}"
+            uid += 1
+            fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0)
+            events.append(MarketEvent(t, ARRIVAL, name,
+                                      (("kind_index", kind),)))
+        elif kind_name == DEPARTURE:
+            if len(alive) <= 1:
+                continue
+            name = alive[int(rng.integers(len(alive)))]
+            del fleet[name]
+            events.append(MarketEvent(t, DEPARTURE, name))
+        elif kind_name == PRICE_TICK:
+            name = alive[int(rng.integers(len(alive)))]
+            step = float(np.exp(rng.normal(0.0, price_sigma)))
+            scale = float(np.clip(fleet[name]["price_scale"] * step,
+                                  0.25, 4.0))
+            fleet[name]["price_scale"] = scale
+            events.append(MarketEvent(t, PRICE_TICK, name,
+                                      (("price_scale", scale),)))
+        elif kind_name == DEGRADE:
+            healthy = [n for n in alive if not fleet[n]["degraded"]]
+            scale = float(rng.uniform(*degrade_range))
+            if not healthy:
+                continue
+            name = healthy[int(rng.integers(len(healthy)))]
+            fleet[name]["degraded"] = True
+            events.append(MarketEvent(t, DEGRADE, name,
+                                      (("beta_scale", scale),)))
+        else:                                    # RECOVER
+            degraded = [n for n in alive if fleet[n]["degraded"]]
+            if not degraded:
+                continue
+            name = degraded[int(rng.integers(len(degraded)))]
+            fleet[name]["degraded"] = False
+            events.append(MarketEvent(t, RECOVER, name,
+                                      (("beta_scale", 1.0),)))
+
+    return MarketEpisode(seed, float(horizon_s), kind_names,
+                         int(max_platforms), tuple(initial), tuple(events))
+
+
+def standard_episodes(kind_names: Sequence[str], *, n_episodes: int = 3,
+                      horizon_s: float = 3600.0, seed: int = 0,
+                      **kw) -> Tuple[MarketEpisode, ...]:
+    """The standard episode suite: ``n_episodes`` independent episodes
+    with decorrelated seeds — the benchmark's policy-vs-policy battery."""
+    return tuple(generate_episode(kind_names, horizon_s=horizon_s,
+                                  seed=seed + 1000 * i, **kw)
+                 for i in range(n_episodes))

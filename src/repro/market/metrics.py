@@ -1,0 +1,173 @@
+"""Episode evaluation: traces, SLO accounting, hypervolume-over-time and
+regret against the clairvoyant oracle.
+
+An :class:`~repro.market.simulator.EpisodeResult` is a sequence of
+inter-event intervals, each executed under a fixed allocation.  This
+module reduces those to:
+
+* per-episode traces (makespan / cost-rate / fleet-size over time),
+* totals: accrued dollars, time-weighted mean latency, SLO-violation
+  seconds and counts, replans and replanning wall time,
+* hypervolume-over-time: the 2-D hypervolume of the realised
+  (cost-rate, makespan) operating points accumulated up to each event,
+* regret: excess accrued cost and time-averaged excess latency versus
+  the oracle run of the same episode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import pareto
+from repro.market.simulator import EpisodeResult
+
+
+@dataclasses.dataclass(frozen=True)
+class EpisodeMetrics:
+    policy: str
+    episode_seed: int
+    horizon_s: float
+    slo_latency: float
+    # traces (one entry per inter-event interval)
+    t0: np.ndarray
+    t1: np.ndarray
+    makespan: np.ndarray
+    cost_rate: np.ndarray
+    n_alive: np.ndarray
+    # totals
+    accrued_cost: float           # raw $ over the episode
+    avg_makespan: float           # time-weighted seconds per round
+    slo_violation_s: float        # seconds spent above the SLO
+    slo_violations: int           # intervals above the SLO
+    replans: int
+    replan_wall_s: float          # per-event replanning only
+    # one-time t=0 planning / presolve wall seconds
+    reset_wall_s: float = 0.0
+    # SLA accounting: every second above the SLO is charged this rate,
+    # so a policy cannot undercut the oracle on dollars by simply not
+    # meeting the latency target.  0 disables the charge.
+    sla_penalty_rate: float = 0.0
+
+    @property
+    def durations(self) -> np.ndarray:
+        return self.t1 - self.t0
+
+    @property
+    def sla_penalty_cost(self) -> float:
+        return self.sla_penalty_rate * self.slo_violation_s
+
+    @property
+    def total_cost(self) -> float:
+        """Accrued dollars including SLA penalties — the cost that
+        regret is measured on."""
+        return self.accrued_cost + self.sla_penalty_cost
+
+
+def summarise(result: EpisodeResult, *,
+              sla_penalty_rate: float = 0.0) -> EpisodeMetrics:
+    iv = result.intervals
+    t0 = np.array([r.t0 for r in iv])
+    t1 = np.array([r.t1 for r in iv])
+    mk = np.array([r.makespan for r in iv])
+    cr = np.array([r.cost_rate for r in iv])
+    alive = np.array([r.n_alive for r in iv])
+    dt = t1 - t0
+    horizon = float(dt.sum())
+    viol = mk > result.slo_latency * (1 + 1e-9)
+    return EpisodeMetrics(
+        result.policy, result.episode_seed, result.horizon_s,
+        result.slo_latency, t0, t1, mk, cr, alive,
+        accrued_cost=float((cr * dt).sum()),
+        avg_makespan=float((mk * dt).sum() / max(horizon, 1e-12)),
+        slo_violation_s=float(dt[viol].sum()),
+        slo_violations=int(viol.sum()),
+        replans=sum(r.replanned for r in iv),
+        replan_wall_s=float(sum(r.replan_wall_s for r in iv
+                                if r.replanned)),
+        reset_wall_s=float(result.reset_wall_s),
+        sla_penalty_rate=float(sla_penalty_rate))
+
+
+def hypervolume_over_time(metrics: EpisodeMetrics,
+                          ref: Tuple[float, float] = None
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """(times, hv): hypervolume of the realised (cost_rate, makespan)
+    operating points accumulated up to each interval end, w.r.t. ``ref``
+    (default: 1.1x the episode's worst realised point — pass a shared
+    ref to compare policies)."""
+    if ref is None:
+        ref = (float(metrics.cost_rate.max()) * 1.1,
+               float(metrics.makespan.max()) * 1.1)
+    hv = np.empty(len(metrics.t1))
+    for i in range(len(metrics.t1)):
+        hv[i] = pareto.hypervolume(metrics.cost_rate[:i + 1],
+                                   metrics.makespan[:i + 1],
+                                   ref[0], ref[1])
+    return metrics.t1, hv
+
+
+@dataclasses.dataclass(frozen=True)
+class RegretReport:
+    """Policy-vs-oracle on one episode (aligned interval-by-interval —
+    both runs replay the same event trace)."""
+    policy: str
+    episode_seed: int
+    cost_regret: float            # $ accrued beyond the oracle
+    makespan_regret: float        # time-averaged excess seconds per round
+    slo_excess_s: float           # SLO-violation seconds beyond oracle
+    replans: int
+    replan_wall_s: float
+
+
+def regret(policy: EpisodeMetrics, oracle: EpisodeMetrics) -> RegretReport:
+    if len(policy.t1) != len(oracle.t1):
+        raise ValueError("episodes do not align (different event traces)")
+    dt = policy.durations
+    horizon = float(dt.sum())
+    return RegretReport(
+        policy.policy, policy.episode_seed,
+        cost_regret=policy.total_cost - oracle.total_cost,
+        makespan_regret=float(((policy.makespan - oracle.makespan)
+                               * dt).sum() / max(horizon, 1e-12)),
+        slo_excess_s=policy.slo_violation_s - oracle.slo_violation_s,
+        replans=policy.replans,
+        replan_wall_s=policy.replan_wall_s)
+
+
+def regret_table(results: List[EpisodeResult],
+                 oracle_results: List[EpisodeResult], *,
+                 sla_penalty_rate: float = 0.0
+                 ) -> Dict[str, Dict[str, float]]:
+    """Aggregate per-policy mean regret over an episode suite.
+
+    ``results`` may hold several policies x episodes; ``oracle_results``
+    holds one oracle run per episode (matched by seed).
+    ``sla_penalty_rate`` may also be a ``{seed: rate}`` mapping when the
+    charge is episode-specific.
+    """
+    def rate_for(seed):
+        if isinstance(sla_penalty_rate, dict):
+            return sla_penalty_rate[seed]
+        return sla_penalty_rate
+
+    oracles = {r.episode_seed:
+               summarise(r, sla_penalty_rate=rate_for(r.episode_seed))
+               for r in oracle_results}
+    rows: Dict[str, List[RegretReport]] = {}
+    for r in results:
+        rep = regret(summarise(r, sla_penalty_rate=rate_for(
+            r.episode_seed)), oracles[r.episode_seed])
+        rows.setdefault(r.policy, []).append(rep)
+    out: Dict[str, Dict[str, float]] = {}
+    for policy, reps in rows.items():
+        out[policy] = dict(
+            cost_regret=float(np.mean([r.cost_regret for r in reps])),
+            makespan_regret=float(np.mean([r.makespan_regret
+                                           for r in reps])),
+            slo_excess_s=float(np.mean([r.slo_excess_s for r in reps])),
+            replans=float(np.mean([r.replans for r in reps])),
+            replan_wall_s=float(np.mean([r.replan_wall_s
+                                         for r in reps])))
+    return out

@@ -1,0 +1,289 @@
+"""Discrete-event spot-market simulator over a fixed-width slot fleet.
+
+The fleet is a platform-slot array of capacity ``max_platforms``: every
+slot is either occupied by a live platform instance (with its own
+degradation and spot-price state) or empty.  Empty/dead slots are
+penalised via :func:`repro.core.scenarios.dead_latency_scale` and pinned
+via :func:`repro.core.scenarios.dead_pin_mask`, so the allocation
+problem a policy sees always has the SAME ``(max_platforms, tau)`` shape
+— which is what lets every replanning solve in an episode reuse one
+compiled stacked interior-point call (asserted through
+:func:`repro.core.lp.stacked_compile_count`).
+
+Execution semantics: the workload is a recurring divisible job.  Over an
+inter-event interval of length ``dt`` under allocation ``A`` the fleet
+completes ``dt / makespan(A)`` rounds, each billing ``cost(A)`` — i.e.
+latency is the round makespan and money accrues at ``cost/makespan``
+dollars per second.  An allocation that leaves work on a departed
+platform sees the DEAD_PENALTY latency: work stranded on a vanished
+machine never finishes, which is exactly the failure a replanning
+policy exists to avoid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import heuristics
+from repro.core import lp as lpmod
+from repro.core.problem import AllocationProblem
+from repro.core.scenarios import dead_latency_scale, dead_pin_mask
+from repro.market import events as ev
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformKind:
+    """One catalogue entry: a rentable platform kind's fitted model rows
+    against the (fixed) workload task set."""
+    name: str
+    beta: np.ndarray        # (tau,) seconds per work unit, per task
+    gamma: np.ndarray       # (tau,) setup seconds, per task
+    rho: float              # billing quantum, seconds
+    pi: float               # $ per quantum
+
+    def __post_init__(self):
+        object.__setattr__(self, "beta",
+                           np.asarray(self.beta, dtype=np.float64))
+        object.__setattr__(self, "gamma",
+                           np.asarray(self.gamma, dtype=np.float64))
+
+
+def catalog_from_problem(problem: AllocationProblem
+                         ) -> List[PlatformKind]:
+    """One kind per platform row of a fitted allocation problem — the
+    usual way to build a market catalogue from the paper's cluster."""
+    names = problem.platform_names or tuple(
+        f"kind{i}" for i in range(problem.mu))
+    return [PlatformKind(names[i], problem.beta[i], problem.gamma[i],
+                         float(problem.rho[i]), float(problem.pi[i]))
+            for i in range(problem.mu)]
+
+
+@dataclasses.dataclass
+class Slot:
+    """One fleet slot; ``instance is None`` means the slot is empty."""
+    instance: Optional[str] = None
+    kind: Optional[PlatformKind] = None
+    beta_scale: float = 1.0       # >1 = degraded throughput
+    price_scale: float = 1.0      # spot multiplier on pi
+
+    @property
+    def occupied(self) -> bool:
+        return self.instance is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class View:
+    """What a policy sees at a replanning point (true current state)."""
+    problem: AllocationProblem    # penalised, (max_platforms, tau)
+    dead: np.ndarray              # (max_platforms,) empty-or-dead slots
+    pin: Optional[np.ndarray]     # (max_platforms, tau) b_fixed0 mask
+    t: float
+    slo_latency: float
+
+
+class Fleet:
+    """Fixed-width platform-slot array driven by market events."""
+
+    def __init__(self, catalog: Sequence[PlatformKind], n: np.ndarray,
+                 max_platforms: int,
+                 task_names: Optional[Tuple[str, ...]] = None):
+        self.catalog = list(catalog)
+        self.n = np.asarray(n, dtype=np.float64)
+        self.task_names = task_names
+        self.slots = [Slot() for _ in range(max_platforms)]
+        tau = self.n.shape[0]
+        for kind in self.catalog:
+            if kind.beta.shape != (tau,) or kind.gamma.shape != (tau,):
+                raise ValueError(
+                    f"kind {kind.name!r} shaped {kind.beta.shape}, "
+                    f"workload has tau={tau}")
+
+    @classmethod
+    def from_episode(cls, catalog, n, episode: ev.MarketEpisode,
+                     task_names=None) -> "Fleet":
+        fleet = cls(catalog, n, episode.max_platforms, task_names)
+        for name, kind_index in episode.initial:
+            fleet._occupy(name, kind_index)
+        return fleet
+
+    # -- state transitions ---------------------------------------------
+    def _slot_of(self, instance: str) -> int:
+        for i, s in enumerate(self.slots):
+            if s.instance == instance:
+                return i
+        raise KeyError(instance)
+
+    def _occupy(self, instance: str, kind_index: int) -> int:
+        for i, s in enumerate(self.slots):
+            if not s.occupied:
+                self.slots[i] = Slot(instance, self.catalog[kind_index])
+                return i
+        raise RuntimeError("fleet full")
+
+    def apply_event(self, event: ev.MarketEvent) -> None:
+        if event.kind == ev.ARRIVAL:
+            self._occupy(event.platform, int(event.get("kind_index")))
+        elif event.kind == ev.DEPARTURE:
+            self.slots[self._slot_of(event.platform)] = Slot()
+        elif event.kind == ev.PRICE_TICK:
+            self.slots[self._slot_of(event.platform)].price_scale = \
+                float(event.get("price_scale"))
+        elif event.kind in (ev.DEGRADE, ev.RECOVER):
+            self.slots[self._slot_of(event.platform)].beta_scale = \
+                float(event.get("beta_scale"))
+        else:
+            raise ValueError(f"unknown event kind {event.kind!r}")
+
+    # -- solver-facing views -------------------------------------------
+    @property
+    def dead(self) -> np.ndarray:
+        return np.array([not s.occupied for s in self.slots], dtype=bool)
+
+    @property
+    def n_alive(self) -> int:
+        return int((~self.dead).sum())
+
+    def problem(self) -> AllocationProblem:
+        """The penalised fixed-shape allocation problem for the current
+        fleet.  Empty slots borrow the first catalogue kind's spec and
+        are dead-penalised; occupied slots fold in their degradation and
+        spot-price state."""
+        filler = self.catalog[0]
+        dead = self.dead
+        beta, gamma, rho, pi, names = [], [], [], [], []
+        for s in self.slots:
+            kind = s.kind or filler
+            beta.append(kind.beta * s.beta_scale)
+            gamma.append(kind.gamma)
+            rho.append(kind.rho)
+            pi.append(kind.pi * s.price_scale)
+            names.append(s.instance or "<empty>")
+        scale = dead_latency_scale(dead)
+        return AllocationProblem(
+            np.stack(beta) * scale[:, None],
+            np.stack(gamma) * scale[:, None],
+            self.n, np.asarray(rho), np.asarray(pi),
+            tuple(names), self.task_names)
+
+    def view(self, t: float, slo_latency: float) -> View:
+        dead = self.dead
+        return View(self.problem(), dead,
+                    dead_pin_mask(dead, self.n.shape[0]), t, slo_latency)
+
+
+def slo_for_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
+                    episode: ev.MarketEpisode, *,
+                    penalty_factor: float = 2.0
+                    ) -> Tuple[float, float]:
+    """(slo_latency, sla_penalty_rate) anchors for an episode.
+
+    The SLO sits at the geometric mean of the initial fleet's LP
+    makespan lower bound and its naive proportional-split makespan:
+    demanding enough that blind splits struggle, loose enough that an
+    optimised split can genuinely meet it.  The SLA penalty charges
+    violating seconds at ``penalty_factor`` times the naive split's
+    cost rate, so no policy profits from ignoring the latency target.
+    """
+    fleet = Fleet.from_episode(catalog, n, episode)
+    p = fleet.problem()
+    alive = ~fleet.dead
+    w = np.where(alive, 1.0 / p.single_platform_latency(), 0.0)
+    mk_split, cost_split = heuristics.evaluate(
+        p, heuristics.proportional_split(p, w))
+    sol = lpmod.solve_node_lp(p.node_lp(
+        None, b_fixed0=dead_pin_mask(fleet.dead, p.tau)))
+    lb = float(sol.obj) if bool(sol.converged) else mk_split * 0.5
+    slo = float(np.sqrt(max(lb, 1e-9) * mk_split))
+    return slo, penalty_factor * cost_split / mk_split
+
+
+# ---------------------------------------------------------------------------
+# Episode execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IntervalRecord:
+    """One inter-event interval executed under a fixed allocation."""
+    t0: float
+    t1: float
+    makespan: float               # seconds per workload round
+    cost_rate: float              # $ per second of continuous operation
+    n_alive: int
+    replanned: bool
+    replan_wall_s: float
+    event_kind: str               # event that OPENED this interval
+
+
+@dataclasses.dataclass
+class EpisodeResult:
+    policy: str
+    episode_seed: int
+    horizon_s: float
+    slo_latency: float
+    intervals: List[IntervalRecord]
+    # stacked-solver compile stats: after the first replan vs episode end
+    # — equality certifies the fixed-width representation recompiled
+    # nothing once the episode was under way.
+    compiles_after_first_replan: int
+    compiles_end: int
+    # one-time planning/presolve cost at t=0, kept OUT of the intervals'
+    # replan_wall_s so per-event replanning effort is not conflated with
+    # a policy's presolve (FrontierLookupPolicy front-loads everything)
+    reset_wall_s: float = 0.0
+
+    @property
+    def no_recompile(self) -> bool:
+        return self.compiles_end == self.compiles_after_first_replan
+
+
+def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
+                episode: ev.MarketEpisode, policy, *,
+                slo_latency: float,
+                task_names=None) -> EpisodeResult:
+    """Replay an episode against a policy.
+
+    The loop alternates: close the current inter-event interval under
+    the standing allocation, apply the event, let the policy replan.
+    The policy's ``replan`` may return its previous allocation (cheap
+    no-op); the standing allocation is always evaluated against the TRUE
+    current fleet, so un-replanned stranded work costs what it should.
+    """
+    fleet = Fleet.from_episode(catalog, n, episode, task_names)
+    view = fleet.view(0.0, slo_latency)
+    t0 = _time.perf_counter()
+    alloc = policy.reset(view)
+    reset_wall = _time.perf_counter() - t0
+    compiles_first = lpmod.stacked_compile_count()
+
+    intervals: List[IntervalRecord] = []
+
+    def close(t_from: float, t_to: float, replanned: bool, wall: float,
+              opened_by: str) -> None:
+        if t_to <= t_from:
+            return
+        mk, cost = heuristics.evaluate(fleet.problem(), alloc)
+        intervals.append(IntervalRecord(
+            t_from, t_to, mk, cost / mk, fleet.n_alive, replanned, wall,
+            opened_by))
+
+    t_prev, replanned, wall, opened_by = 0.0, True, 0.0, "reset"
+    for event in episode.events:
+        close(t_prev, event.time, replanned, wall, opened_by)
+        fleet.apply_event(event)
+        view = fleet.view(event.time, slo_latency)
+        t0 = _time.perf_counter()
+        new_alloc = policy.replan(view, event)
+        wall = _time.perf_counter() - t0
+        replanned = new_alloc is not alloc
+        alloc = new_alloc
+        t_prev, opened_by = event.time, event.kind
+    close(t_prev, episode.horizon_s, replanned, wall, opened_by)
+
+    return EpisodeResult(policy.name, episode.seed, episode.horizon_s,
+                         slo_latency, intervals, compiles_first,
+                         lpmod.stacked_compile_count(),
+                         reset_wall_s=reset_wall)

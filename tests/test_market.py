@@ -1,0 +1,293 @@
+"""Spot-market simulator: determinism, padding invariants, policies."""
+import numpy as np
+import pytest
+
+from repro.core import heuristics, milp, scenarios
+from repro.market import events, metrics, simulator
+from repro.market.policies import (ResplitPolicy, StaticPolicy,
+                                   WarmMILPPolicy, select_cheapest_slo)
+from tests.test_milp import random_problem
+
+KW = dict(horizon_s=3600.0, n_initial=3, max_platforms=6)
+
+
+def _market(seed=3, mu=4, tau=5):
+    base = random_problem(seed, mu, tau)
+    return base, simulator.catalog_from_problem(base)
+
+
+def _slo(catalog, n, episode, factor=0.8):
+    fleet = simulator.Fleet.from_episode(catalog, n, episode)
+    lat = fleet.problem().single_platform_latency()
+    return float(lat[~fleet.dead].min()) * factor
+
+
+# ---------------------------------------------------------------------------
+# Event-stream determinism
+# ---------------------------------------------------------------------------
+
+def test_trace_byte_identical_under_seed():
+    names = [f"kind{i}" for i in range(4)]
+    a = events.generate_episode(names, seed=11, **KW)
+    b = events.generate_episode(names, seed=11, **KW)
+    assert events.trace_digest(a) == events.trace_digest(b)
+    assert a.events == b.events
+    c = events.generate_episode(names, seed=12, **KW)
+    assert events.trace_digest(a) != events.trace_digest(c)
+
+
+def test_trace_independent_of_workload():
+    """The event stream is a function of (catalogue, capacity, seed) only
+    — the same market replays identically no matter how many jobs ride
+    on it."""
+    _, cat_small = _market(seed=3, mu=4, tau=5)
+    _, cat_large = _market(seed=9, mu=4, tau=9)
+    names = [k.name for k in cat_small]
+    assert names == [k.name for k in cat_large]
+    a = events.generate_episode(names, seed=5, **KW)
+    b = events.generate_episode([k.name for k in cat_large], seed=5, **KW)
+    assert events.trace_digest(a) == events.trace_digest(b)
+
+
+def test_event_stream_validity():
+    names = [f"kind{i}" for i in range(3)]
+    ep = events.generate_episode(names, seed=1, horizon_s=3600.0,
+                                 n_initial=2, max_platforms=4,
+                                 arrival_rate=8.0, departure_rate=8.0)
+    alive = {n for n, _ in ep.initial}
+    t_prev = 0.0
+    for ev in ep.events:
+        assert t_prev < ev.time < ep.horizon_s
+        t_prev = ev.time
+        if ev.kind == events.ARRIVAL:
+            assert ev.platform not in alive
+            alive.add(ev.platform)
+        elif ev.kind == events.DEPARTURE:
+            alive.remove(ev.platform)
+        else:
+            assert ev.platform in alive
+        assert 1 <= len(alive) <= ep.max_platforms
+
+
+# ---------------------------------------------------------------------------
+# Fleet state machine
+# ---------------------------------------------------------------------------
+
+def test_fleet_applies_events_and_reuses_slots():
+    base, catalog = _market()
+    names = [k.name for k in catalog]
+    ep = events.generate_episode(names, seed=2, **KW)
+    fleet = simulator.Fleet.from_episode(catalog, base.n, ep)
+    assert fleet.n_alive == len(ep.initial)
+    p0 = fleet.problem()
+    assert p0.mu == ep.max_platforms             # fixed width
+    for ev in ep.events:
+        fleet.apply_event(ev)
+        assert fleet.problem().mu == ep.max_platforms
+        assert 1 <= fleet.n_alive <= ep.max_platforms
+    # a price tick must actually move pi
+    tick = next((e for e in ep.events if e.kind == events.PRICE_TICK),
+                None)
+    if tick is not None:
+        fleet2 = simulator.Fleet.from_episode(catalog, base.n, ep)
+        pi_before = fleet2.problem().pi.copy()
+        for ev in ep.events:
+            fleet2.apply_event(ev)
+            if ev is tick:
+                break
+        assert not np.allclose(fleet2.problem().pi, pi_before)
+
+
+# ---------------------------------------------------------------------------
+# Slot-padding invariants
+# ---------------------------------------------------------------------------
+
+def test_padded_all_alive_matches_unpadded_solve():
+    """A slot-padded problem whose occupied slots are all alive must
+    solve to the same point as the raw unpadded problem."""
+    base = random_problem(5, mu=3, tau=5)
+    padded, empty = scenarios.slot_pad_problem(base, 6)
+    scen = scenarios.Scenario("pad", np.ones(6), np.ones(6), np.ones(6),
+                              np.ones(base.tau), empty)
+    applied = scen.apply(padded)
+    pin = scen.pin_for(padded)
+    cap = float(base.single_platform_cost().min() * 2)
+    kw = dict(node_limit=300, time_limit_s=30)
+    r_pad = milp.solve_bnb(applied, cap, pinned=pin, **kw)
+    r_base = milp.solve_bnb(base, cap, **kw)
+    assert r_pad.alloc is not None and r_base.alloc is not None
+    assert r_pad.alloc[3:].sum() == 0.0          # nothing on empty slots
+    assert abs(r_pad.makespan - r_base.makespan) \
+        <= 1e-3 * r_base.makespan + 1e-9
+    assert abs(r_pad.cost - r_base.cost) <= 1e-6 * max(r_base.cost, 1.0)
+
+
+def test_slot_pad_scenario_set():
+    base = random_problem(6, mu=3, tau=4)
+    suite = scenarios.standard_suite(base, seed=1, n_each=1)
+    padded_suite = scenarios.slot_padded_set(suite, 5)
+    assert padded_suite.names == suite.names
+    for s_pad, s in zip(padded_suite, suite):
+        assert s_pad.dead.shape == (5,)
+        assert s_pad.dead[3:].all()              # padding slots dead
+        np.testing.assert_array_equal(s_pad.dead[:3], s.dead)
+    padded, _ = scenarios.slot_pad_problem(base, 5)
+    q = padded_suite[1].apply(padded)
+    assert (q.mu, q.tau) == (5, base.tau)
+    # dead-platform treatment identical to the unpadded scenario path
+    np.testing.assert_allclose(q.beta[:3], suite[1].apply(base).beta)
+
+
+def test_slot_pad_rejects_shrink():
+    base = random_problem(7, mu=4, tau=4)
+    with pytest.raises(ValueError):
+        scenarios.slot_pad_problem(base, 3)
+
+
+# ---------------------------------------------------------------------------
+# Episode determinism (same seed -> identical metrics)
+# ---------------------------------------------------------------------------
+
+def _run(policy_cls, seed=7, **policy_kw):
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=seed,
+                                 **KW)
+    slo = _slo(catalog, base.n, ep)
+    res = simulator.run_episode(catalog, base.n, ep,
+                                policy_cls(**policy_kw), slo_latency=slo)
+    return metrics.summarise(res), res
+
+
+def test_episode_metrics_deterministic():
+    kw = dict(node_limit=60, time_limit_s=10.0)
+    m1, r1 = _run(WarmMILPPolicy, **kw)
+    m2, r2 = _run(WarmMILPPolicy, **kw)
+    assert m1.accrued_cost == m2.accrued_cost
+    np.testing.assert_array_equal(m1.makespan, m2.makespan)
+    np.testing.assert_array_equal(m1.cost_rate, m2.cost_rate)
+    assert m1.replans == m2.replans
+    assert r1.no_recompile and r2.no_recompile
+
+
+def test_episode_metrics_invariant_under_job_order():
+    """Relabelling the workload's jobs must not change any aggregate
+    metric (heuristic policies are exactly permutation-equivariant)."""
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=7, **KW)
+    slo = _slo(catalog, base.n, ep)
+    res = simulator.run_episode(catalog, base.n, ep, ResplitPolicy(),
+                                slo_latency=slo)
+    m = metrics.summarise(res)
+
+    perm = np.random.default_rng(0).permutation(base.tau)
+    catalog_p = [simulator.PlatformKind(k.name, k.beta[perm],
+                                        k.gamma[perm], k.rho, k.pi)
+                 for k in catalog]
+    res_p = simulator.run_episode(catalog_p, base.n[perm], ep,
+                                  ResplitPolicy(), slo_latency=slo)
+    m_p = metrics.summarise(res_p)
+    np.testing.assert_allclose(m_p.makespan, m.makespan, rtol=1e-9)
+    np.testing.assert_allclose(m_p.cost_rate, m.cost_rate, rtol=1e-9)
+    np.testing.assert_allclose(m_p.accrued_cost, m.accrued_cost,
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Policies and regret accounting
+# ---------------------------------------------------------------------------
+
+def test_select_cheapest_slo():
+    p = random_problem(8, mu=3, tau=4)
+    fast = heuristics.proportional_split(p)
+    cheap = heuristics.cheapest_single_platform(p)
+    mk_f, cost_f = heuristics.evaluate(p, fast)
+    mk_c, cost_c = heuristics.evaluate(p, cheap)
+    assert mk_f < mk_c and cost_c < cost_f
+    # loose SLO -> cheapest; SLO between -> fast one; impossible -> fastest
+    got = select_cheapest_slo(p, [fast, cheap], mk_c * 1.01)
+    assert got is cheap
+    got = select_cheapest_slo(p, [fast, cheap], (mk_f + mk_c) / 2)
+    assert got is fast
+    got = select_cheapest_slo(p, [fast, cheap], mk_f * 0.5)
+    assert got is fast
+
+
+def test_static_policy_redistributes_strands_only():
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=21,
+                                 horizon_s=3600.0, n_initial=3,
+                                 max_platforms=6, departure_rate=10.0,
+                                 arrival_rate=0.5)
+    assert any(e.kind == events.DEPARTURE for e in ep.events)
+    slo = _slo(catalog, base.n, ep)
+    res = simulator.run_episode(catalog, base.n, ep,
+                                StaticPolicy(node_limit=60,
+                                             time_limit_s=10.0),
+                                slo_latency=slo)
+    # every interval's allocation stays feasible: no DEAD_PENALTY blowups
+    # (a stranded share would push the makespan past DEAD_PENALTY*beta)
+    for r in res.intervals:
+        assert r.makespan < scenarios.DEAD_PENALTY / 10
+
+
+def test_regret_accounting_aligns():
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=7, **KW)
+    slo = _slo(catalog, base.n, ep)
+    kw = dict(node_limit=60, time_limit_s=10.0)
+    warm = simulator.run_episode(catalog, base.n, ep,
+                                 WarmMILPPolicy(**kw), slo_latency=slo)
+    from repro.market.policies import OraclePolicy
+    oracle = simulator.run_episode(catalog, base.n, ep,
+                                   OraclePolicy(node_limit=150,
+                                                time_limit_s=15.0),
+                                   slo_latency=slo)
+    rep = metrics.regret(metrics.summarise(warm),
+                         metrics.summarise(oracle))
+    assert np.isfinite(rep.cost_regret)
+    assert np.isfinite(rep.makespan_regret)
+    table = metrics.regret_table([warm], [oracle])
+    assert set(table) == {"warm_milp"}
+    assert table["warm_milp"]["replans"] >= 1
+    t, hv = metrics.hypervolume_over_time(metrics.summarise(warm))
+    assert len(t) == len(hv) and (np.diff(hv) >= -1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# Elastic-controller integration
+# ---------------------------------------------------------------------------
+
+def test_elastic_consumes_market_events():
+    from repro.core.problem import AllocationProblem
+    from repro.runtime.elastic import ElasticController
+
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=13,
+                                 horizon_s=3600.0, n_initial=3,
+                                 max_platforms=6, arrival_rate=6.0)
+    rows = [(n, catalog[k]) for n, k in ep.initial]
+    prob = AllocationProblem(
+        np.stack([k.beta for _, k in rows]),
+        np.stack([k.gamma for _, k in rows]), base.n,
+        np.array([k.rho for _, k in rows]),
+        np.array([k.pi for _, k in rows]),
+        tuple(n for n, _ in rows))
+    ctl = ElasticController(prob, cost_cap=None,
+                            solve_kw=dict(node_limit=40, time_limit_s=10))
+    ctl.solve()
+    mu0 = ctl.problem.mu
+    saw_arrival = False
+    for ev in ep.events[:5]:
+        out = ctl.apply_event(ev, catalog)
+        if ev.kind == events.ARRIVAL:
+            saw_arrival = True
+        if out is not None:
+            np.testing.assert_allclose(out.sum(axis=0), 1.0, atol=1e-6)
+    if saw_arrival:
+        assert ctl.problem.mu > mu0              # scale-up on arrival
+    # a spot-price tick repricing relative to the ORIGINAL catalogue price
+    name = next(iter(ctl.health))
+    i = list(ctl.health).index(name)
+    ctl.apply_event(events.MarketEvent(3599.0, events.PRICE_TICK, name,
+                                       (("price_scale", 2.5),)))
+    assert np.isclose(ctl.problem.pi[i], ctl._base_pi[i] * 2.5)

@@ -177,6 +177,73 @@ def test_sweep_rejects_mixed_caps():
         milp.solve_bnb_sweep(p, [None, 10.0])
 
 
+def test_sweep_priority_refill_results_unchanged():
+    """Wide batches (batch_width > n_trees) refill best-bound across
+    trees and process solved rows in best-bound order (in-round
+    incumbent propagation).  Results must stay within solver tolerance
+    of the serial per-cap B&B — the reordering changes only WHEN bounds
+    become available, never what they prove."""
+    p = random_problem(50)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 3)
+    kw = dict(node_limit=150, time_limit_s=30)
+    for width in (8, 16):                    # both > n_trees = 3
+        wide = milp.solve_bnb_sweep(p, caps, batch_width=width, **kw)
+        assert len(wide) == len(caps)
+        for ck, rw in zip(caps, wide):
+            rs = milp.solve_bnb(p, float(ck), **kw)
+            if rs.alloc is None:
+                continue
+            assert rw.alloc is not None
+            assert rw.makespan <= rs.makespan * 1.02 + 1e-9
+            assert rw.cost <= ck * (1 + 1e-6)
+            np.testing.assert_allclose(rw.alloc.sum(axis=0), 1.0,
+                                       atol=1e-6)
+
+
+def test_pinned_root_excludes_platforms():
+    """A root pin (dead platform / empty fleet slot) must keep every
+    incumbent and node solve off the pinned rows, and match the solve of
+    the problem with those platforms removed."""
+    p = random_problem(51, mu=4, tau=6)
+    from repro.core.problem import AllocationProblem
+    pin = np.zeros((4, 6), dtype=bool)
+    pin[1, :] = True
+    keep = [0, 2, 3]
+    sub = AllocationProblem(p.beta[keep], p.gamma[keep], p.n,
+                            p.rho[keep], p.pi[keep])
+    for cap in (None, float(p.single_platform_cost().min() * 2)):
+        r_pin = milp.solve_bnb(p, cap, pinned=pin, node_limit=300,
+                               time_limit_s=30)
+        r_sub = milp.solve_bnb(sub, cap, node_limit=300, time_limit_s=30)
+        assert r_pin.alloc is not None and r_sub.alloc is not None
+        assert r_pin.alloc[1].sum() == 0.0
+        assert abs(r_pin.makespan - r_sub.makespan) \
+            <= 1e-3 * r_sub.makespan + 1e-9
+
+
+def test_pinned_cheapest_platform_with_tight_budget_is_infeasible():
+    """Budget-repair fallbacks must respect the pin: when the globally
+    cheapest platform is pinned (dead) and the budget only IT could
+    satisfy, the solve must report infeasible instead of silently
+    allocating to the dead platform."""
+    p = random_problem(51, mu=4, tau=6)
+    cost = p.single_platform_cost()
+    cheapest = int(np.argmin(cost))
+    pin = np.zeros((4, 6), dtype=bool)
+    pin[cheapest, :] = True
+    # affordable for the pinned platform only
+    cap = float(cost[cheapest]) * 1.01
+    if float(np.sort(cost)[1]) <= cap:
+        pytest.skip("second-cheapest platform also fits this budget")
+    r = milp.solve_bnb(p, cap, pinned=pin, node_limit=200, time_limit_s=30)
+    assert r.alloc is None, "allocated to a pinned (dead) platform"
+    caps = [cap, cap * 1.02]
+    for rs in milp.solve_bnb_sweep(p, caps, pinned=pin, node_limit=200,
+                                   time_limit_s=30):
+        assert rs.alloc is None or rs.alloc[cheapest].sum() == 0.0
+
+
 def test_degenerate_warm_alloc_is_projected():
     """A warm start with unassigned task columns must not poison the
     incumbent (evaluate() silently under-counts unassigned tasks)."""

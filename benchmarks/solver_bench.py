@@ -7,7 +7,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import SMOKE, experiment_problem, smoke_scaled, timeit
+from benchmarks.common import (SMOKE, experiment_problem, seeded,
+                               smoke_scaled, timeit)
 from repro.core import lp, milp, pareto
 
 
@@ -38,6 +39,25 @@ def run() -> list:
                       repeats=2, warmup=1)
     rows.append((f"solver.vmapped_eps_sweep.8x16x{n_caps}caps", us_sweep,
                  f"us_per_cap={us_sweep / len(caps):.0f}"))
+
+    # -- linsolve backend column: the same stacked relaxation through each
+    # Newton normal-equation backend.  "xla" is the batched-LU baseline;
+    # "pallas" is the blocked batched-Cholesky kernel (compiled on TPU,
+    # interpret-mode on CPU — so on a CPU runner the pallas row measures
+    # the interpreter, not kernel speed, and its value is the parity
+    # check); "pallas-interpret" forces the interpreter everywhere.
+    obj_by_backend = {}
+    for backend in ("xla", "pallas-interpret", "pallas"):
+        obj_by_backend[backend] = pareto.relaxation_frontier(
+            fitted8, caps, linsolve=backend)[1]
+        us_b = timeit(lambda b=backend: pareto.relaxation_frontier(
+            fitted8, caps, linsolve=b)[1], repeats=2, warmup=1)
+        agree = float(np.abs(obj_by_backend[backend]
+                             - obj_by_backend["xla"]).max())
+        rows.append((f"solver.linsolve.{backend}.8x16x{n_caps}caps", us_b,
+                     f"max_obj_diff_vs_xla={agree:.2e};"
+                     f"device={'tpu' if backend == 'pallas' else 'any'}"
+                     if backend != "xla" else "baseline"))
 
     # headline: full Pareto sweep, serial B&B per budget point vs the
     # batched engine (lockstep B&B over one stacked IPM per round)
@@ -79,6 +99,83 @@ def run() -> list:
                  f"speedup={us_serial / us_batched:.2f}x;"
                  f"max_rel_mk_diff={rel:.4f};"
                  f"batched_worse_by={max(worse, 0.0):.4f}"))
+
+    # -- per-row early exit on the full-scale sweep: Newton-row ledger +
+    # per-row IPM-iteration histogram (diagnoses the lockstep batch
+    # iterating until its slowest member converges — the ~1x full-scale
+    # speedup of the ROADMAP item)
+    lp.reset_newton_row_stats()
+    t_ee0 = time.perf_counter()
+    pareto.milp_tradeoff_batched(fittedp, n_points=n_points, **kw)
+    wall_ee = time.perf_counter() - t_ee0
+    s_on = lp.newton_row_stats()
+    lp.reset_newton_row_stats()
+    t_ls0 = time.perf_counter()
+    pareto.milp_tradeoff_batched(fittedp, n_points=n_points,
+                                 early_exit=False, **kw)
+    wall_ls = time.perf_counter() - t_ls0
+    s_off = lp.newton_row_stats()
+    lp.reset_newton_row_stats()
+    reduction = 1.0 - s_on["active_rows"] / max(s_on["lockstep_rows"], 1)
+    hist = ";".join(f"{b}-{b + 9}it:{c}"
+                    for b, c in sorted(s_on["hist"].items()))
+    rows.append(("solver.early_exit.newton_rows", wall_ee * 1e6,
+                 f"lockstep_rows={s_on['lockstep_rows']};"
+                 f"active_rows={s_on['active_rows']};"
+                 f"reduction={reduction:.1%};"
+                 f"wall_vs_lockstep={wall_ls / max(wall_ee, 1e-9):.2f}x"))
+    rows.append(("solver.early_exit.iter_histogram", 0.0, hist))
+    rows.append(("solver.early_exit.padding_rows_saved", 0.0,
+                 f"active_with_early_exit={s_on['active_rows']};"
+                 f"active_without={s_off['active_rows']}"))
+
+    # -- early-exit gains on the REPLAN sweep (the ROADMAP "~1x at full
+    # scale" item): warm starts close most replanning trees at or near
+    # the root, so the fixed-width lockstep rounds run mostly padding —
+    # per-row early exit retires those rows at iteration zero.  At full
+    # scale this cuts total Newton rows by well over 25% (the epsilon
+    # sweep above is node-limit-bound with full batches, so its savings
+    # come from iteration dispersion only).
+    from benchmarks.market_bench import SMOKE_EPISODE_SEED
+    from repro.market import events as mev
+    from repro.market import simulator as msim
+    from repro.market.policies import WarmMILPPolicy
+    fittedm, *_ = experiment_problem(smoke_scaled(12, 8),
+                                     smoke_scaled(6, 4), seed=3)
+    catalogm = msim.catalog_from_problem(fittedm)
+    # smoke uses market_bench's stress seed (departures hit in-use
+    # platforms) so the smoke row still exercises real replans
+    episode = mev.standard_episodes(
+        [k.name for k in catalogm], n_episodes=1, horizon_s=3600.0,
+        seed=seeded(smoke_scaled(0, SMOKE_EPISODE_SEED)),
+        n_initial=min(3, len(catalogm)),
+        max_platforms=smoke_scaled(8, 6))[0]
+    slo, _ = msim.slo_for_episode(catalogm, fittedm.n, episode)
+    fleet = msim.Fleet.from_episode(catalogm, fittedm.n, episode)
+    views = [fleet.view(0.0, slo)]
+    for e in episode.events:
+        fleet.apply_event(e)
+        views.append(fleet.view(e.time, slo))
+    pol = WarmMILPPolicy(n_caps=5, node_limit=smoke_scaled(120, 60),
+                         time_limit_s=smoke_scaled(30.0, 10.0))
+    pol.reset(views[0])                  # compile + warm caches
+    lp.reset_newton_row_stats()
+    pol._alloc = None
+    t0 = time.perf_counter()
+    for view in views:
+        pol._plan(view)
+    wall_rp = time.perf_counter() - t0
+    s_rp = lp.newton_row_stats()
+    lp.reset_newton_row_stats()
+    red_rp = 1.0 - s_rp["active_rows"] / max(s_rp["lockstep_rows"], 1)
+    hist_rp = ";".join(f"{b}-{b + 9}it:{c}"
+                       for b, c in sorted(s_rp["hist"].items()))
+    rows.append(("solver.early_exit.replan_sweep",
+                 wall_rp * 1e6 / len(views),
+                 f"lockstep_rows={s_rp['lockstep_rows']};"
+                 f"active_rows={s_rp['active_rows']};"
+                 f"reduction={red_rp:.1%};views={len(views)}"))
+    rows.append(("solver.early_exit.replan_iter_histogram", 0.0, hist_rp))
 
     # B&B end-to-end at medium scale
     fitted, *_ = experiment_problem(smoke_scaled(32, 8),

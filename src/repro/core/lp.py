@@ -25,6 +25,32 @@ _MAX_ITERS = 100
 _TOL = 1e-9
 _INF_UB = 1e30          # finite stand-in for +inf upper bounds
 
+# Pluggable Newton linear-system backends.  "xla" is the historical
+# jnp.linalg.solve (batched LU through lapack on CPU); "ref" is the
+# pure-jnp Cholesky oracle (kernels/ref.py); "pallas" is the blocked
+# batched-Cholesky Pallas kernel (kernels/batched_chol.py) compiled on
+# TPU and interpret-mode on CPU; "pallas-interpret" forces interpret mode
+# everywhere (the CI validation path).
+LINSOLVES = ("xla", "ref", "pallas", "pallas-interpret")
+
+
+def _newton_linsolve(linsolve: str, m_mat, rhs):
+    """One normal-equation solve ``M dy = rhs`` under the chosen backend.
+    Called inside the (possibly vmapped) IPM iteration: under ``vmap`` the
+    Pallas path batches into ONE kernel launch over the stacked (B, m, m)
+    matrices instead of B independent solves."""
+    if linsolve == "xla":
+        return jnp.linalg.solve(m_mat, rhs)
+    if linsolve in ("ref", "pallas"):
+        # ops.chol_solve owns the interpret-vs-compiled device dispatch
+        from repro.kernels import ops as _kops
+        return _kops.chol_solve(m_mat, rhs, use_pallas=linsolve == "pallas")
+    if linsolve == "pallas-interpret":
+        from repro.kernels import batched_chol as _bc
+        return _bc.chol_solve(m_mat, rhs, interpret=True)
+    raise ValueError(f"unknown linsolve backend {linsolve!r}; "
+                     f"expected one of {LINSOLVES}")
+
 
 class LPSolution(NamedTuple):
     x: jnp.ndarray          # primal solution in ORIGINAL variables
@@ -96,10 +122,19 @@ def _step_len(v, dv, finite=None):
     return jnp.minimum(1.0, _ETA * ratios.min())
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters",))
-def _solve_std(a, b, c, u, tol=_TOL, *, max_iters: int = _MAX_ITERS):
+@functools.partial(jax.jit, static_argnames=("max_iters", "linsolve"))
+def _solve_std(a, b, c, u, tol=_TOL, active=True, *,
+               max_iters: int = _MAX_ITERS, linsolve: str = "xla"):
     """``tol`` is a traced scalar (changing it does not recompile): B&B
-    node solves bound at ~1e-7 while reference solves keep 1e-9."""
+    node solves bound at ~1e-7 while reference solves keep 1e-9.
+
+    ``active`` (traced bool) is the per-row early-exit hook: an inactive
+    solve starts with its ``done`` flag already set, so under ``vmap`` it
+    contributes zero iterations to the batch (the while-loop trip count is
+    the max over ACTIVE rows) and reports ``iters == 0``.  ``linsolve``
+    (static) picks the Newton normal-equation backend, see
+    :data:`LINSOLVES`.
+    """
     m, n = a.shape
     dtype = a.dtype
     has_ub = u < _INF_UB * 0.5
@@ -137,7 +172,7 @@ def _solve_std(a, b, c, u, tol=_TOL, *, max_iters: int = _MAX_ITERS):
         m_mat = (a * theta_inv[None, :]) @ a.T
         m_mat = m_mat + 1e-11 * jnp.eye(m, dtype=dtype)
         rhs = r_p + a @ (theta_inv * rhat)
-        dy = jnp.linalg.solve(m_mat, rhs)
+        dy = _newton_linsolve(linsolve, m_mat, rhs)
         dx = theta_inv * (a.T @ dy - rhat)
         dz = (rc_xz - z * dx) / x
         ds = jnp.where(has_ub, r_u - dx, 0.0)
@@ -181,15 +216,16 @@ def _solve_std(a, b, c, u, tol=_TOL, *, max_iters: int = _MAX_ITERS):
         *_, it, done = carry
         return (~done) & (it < max_iters)
 
-    init = (x0, y0, z0, w0, s0, jnp.array(0), jnp.array(False))
+    init = (x0, y0, z0, w0, s0, jnp.array(0),
+            ~jnp.asarray(active, dtype=bool))
     x, y, z, w, s, it, _ = jax.lax.while_loop(cond, body, init)
     r_p, r_d, _ = residuals(x, y, z, w, s)
     mu = mu_of(x, z, s, w)
     return x, y, it, jnp.linalg.norm(r_p) / b_norm, jnp.linalg.norm(r_d) / c_norm, mu
 
 
-def solve_lp(c, a_eq, b_eq, g, h, lb, ub, *, max_iters: int = _MAX_ITERS
-             ) -> LPSolution:
+def solve_lp(c, a_eq, b_eq, g, h, lb, ub, *, max_iters: int = _MAX_ITERS,
+             linsolve: str = "xla") -> LPSolution:
     """Solve the bounded LP.  All inputs numpy/JAX arrays; float64 advised."""
     dt = jnp.float64
     std = _standardise(jnp.asarray(c, dt), jnp.asarray(a_eq, dt),
@@ -197,17 +233,19 @@ def solve_lp(c, a_eq, b_eq, g, h, lb, ub, *, max_iters: int = _MAX_ITERS
                        jnp.asarray(h, dt), jnp.asarray(lb, dt),
                        jnp.asarray(ub, dt))
     x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u,
-                                       max_iters=max_iters)
+                                       max_iters=max_iters,
+                                       linsolve=linsolve)
     x_orig = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
     y_orig = y * std.row_scale
     obj = jnp.asarray(c, dt) @ x_orig
     return LPSolution(x_orig, obj, y_orig, it, rp, rd, gap)
 
 
-def solve_node_lp(node, *, max_iters: int = _MAX_ITERS) -> LPSolution:
+def solve_node_lp(node, *, max_iters: int = _MAX_ITERS,
+                  linsolve: str = "xla") -> LPSolution:
     """Convenience wrapper for :class:`repro.core.problem.NodeLP`."""
     return solve_lp(node.c, node.a_eq, node.b_eq, node.g, node.h,
-                    node.lb, node.ub, max_iters=max_iters)
+                    node.lb, node.ub, max_iters=max_iters, linsolve=linsolve)
 
 
 # ---------------------------------------------------------------------------
@@ -226,22 +264,26 @@ _STACKED_SOLVERS: dict = {}
 _STACKED_SIGNATURES: set = set()
 
 
-def _stacked_solver(axes, max_iters: int):
+def _stacked_solver(axes, max_iters: int, linsolve: str):
     """jit(vmap(IPM)) for a given batching pattern; cached so the whole
-    batched sweep compiles exactly once per (pattern, shape)."""
-    key = (axes, max_iters)
+    batched sweep compiles exactly once per (pattern, shape).  The per-row
+    ``active`` mask always batches (axis 0): inactive rows retire at
+    iteration zero, and under the Pallas backend each Newton step of the
+    whole batch is ONE blocked batched-Cholesky kernel launch."""
+    key = (axes, max_iters, linsolve)
     fn = _STACKED_SOLVERS.get(key)
     if fn is not None:
         return fn
 
-    def one(tol, c, a_eq, b_eq, g, h, lb, ub):
+    def one(tol, active, c, a_eq, b_eq, g, h, lb, ub):
         std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
         x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u, tol,
-                                           max_iters=max_iters)
+                                           active, max_iters=max_iters,
+                                           linsolve=linsolve)
         xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
         return LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd, gap)
 
-    fn = jax.jit(jax.vmap(one, in_axes=(None,) + axes))
+    fn = jax.jit(jax.vmap(one, in_axes=(None, 0) + axes))
     _STACKED_SOLVERS[key] = fn
     return fn
 
@@ -259,9 +301,50 @@ def stacked_compile_count() -> int:
     return len(_STACKED_SIGNATURES)
 
 
+# Newton-row accounting for the per-row early-exit path.  One "Newton
+# row" is one row of the stacked batch paying one IPM iteration.  The
+# lockstep baseline charges every row for every iteration of its call
+# (the SIMD batch iterates until its slowest active member converges);
+# the early-exit ledger charges each row only for the iterations it
+# actually ran (inactive padding rows retire at iteration zero, converged
+# rows freeze).  ``solver_bench`` reports the reduction.
+_NEWTON_STATS = {"calls": 0, "lockstep_rows": 0, "active_rows": 0,
+                 "hist": {}}
+
+
+def reset_newton_row_stats() -> None:
+    _NEWTON_STATS.update(calls=0, lockstep_rows=0, active_rows=0, hist={})
+
+
+def newton_row_stats() -> dict:
+    """Snapshot of the Newton-row ledger since the last reset:
+    ``calls``, ``lockstep_rows`` (what pure lockstep would pay),
+    ``active_rows`` (what per-row early exit pays), and ``hist`` — a
+    per-row IPM-iteration histogram (10-iteration buckets)."""
+    out = dict(_NEWTON_STATS)
+    out["hist"] = dict(_NEWTON_STATS["hist"])
+    return out
+
+
+def _record_newton_rows(iters, active) -> None:
+    iters = np.asarray(iters)
+    active = np.asarray(active)
+    act = iters[active]
+    if act.size == 0:
+        return
+    _NEWTON_STATS["calls"] += 1
+    _NEWTON_STATS["lockstep_rows"] += int(iters.shape[0] * act.max())
+    _NEWTON_STATS["active_rows"] += int(act.sum())
+    hist = _NEWTON_STATS["hist"]
+    for it in act:
+        b = 10 * int(it // 10)
+        hist[b] = hist.get(b, 0) + 1
+
+
 def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
                      *, max_iters: int = _MAX_ITERS,
-                     tol: float = _TOL) -> LPSolution:
+                     tol: float = _TOL, linsolve: str = "xla",
+                     row_active=None) -> LPSolution:
     """Solve a whole stack of LPs as ONE jitted, vmapped interior-point call.
 
     Any of the seven arrays may carry a leading batch dimension (detected
@@ -270,6 +353,15 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     sweeps (``g``/``h``/``ub`` batched — scenarios perturb the constraint
     MATRIX, not just the rhs).  All fields of the returned
     :class:`LPSolution` gain a leading batch axis.
+
+    ``linsolve`` selects the Newton normal-equation backend (see
+    :data:`LINSOLVES`); with ``"pallas"`` every Newton step of the batch
+    is one blocked batched-Cholesky kernel launch.  ``row_active`` is an
+    optional (B,) bool mask: inactive rows (e.g. the fixed-width padding
+    of a lockstep B&B round) retire at iteration zero instead of paying
+    the whole batch's Newton work; their solution rows are garbage and
+    must be discarded by the caller.  The mask is a traced argument —
+    changing it never recompiles.
     """
     dt = jnp.float64
     arrs = tuple(jnp.asarray(v, dt) for v in (c, a_eq, b_eq, g, h, lb, ub))
@@ -285,13 +377,25 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     sizes = {a.shape[0] for a, ax in zip(arrs, axes) if ax == 0}
     if len(sizes) != 1:
         raise ValueError(f"inconsistent batch sizes: {sorted(sizes)}")
-    _STACKED_SIGNATURES.add((axes, max_iters,
+    (batch,) = sizes
+    if row_active is None:
+        active = jnp.ones((batch,), dtype=bool)
+    else:
+        active = jnp.asarray(row_active, dtype=bool)
+        if active.shape != (batch,):
+            raise ValueError(f"row_active shaped {active.shape}, "
+                             f"expected ({batch},)")
+    _STACKED_SIGNATURES.add((axes, max_iters, linsolve,
                              tuple(a.shape for a in arrs)))
-    return _stacked_solver(axes, max_iters)(jnp.asarray(tol, dt), *arrs)
+    sol = _stacked_solver(axes, max_iters, linsolve)(
+        jnp.asarray(tol, dt), active, *arrs)
+    _record_newton_rows(sol.iters, active)
+    return sol
 
 
 def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
-                           tol: float = _TOL) -> LPSolution:
+                           tol: float = _TOL, linsolve: str = "xla",
+                           row_active=None) -> LPSolution:
     """Stack a sequence of same-shape :class:`~repro.core.problem.NodeLP`
     relaxations (e.g. one per scenario x budget point) and solve them in a
     single batched IPM call."""
@@ -300,15 +404,16 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
         raise ValueError("empty node stack")
     stacked = [np.stack([np.asarray(getattr(n, f)) for n in nodes])
                for f in ("c", "a_eq", "b_eq", "g", "h", "lb", "ub")]
-    return solve_lp_stacked(*stacked, max_iters=max_iters, tol=tol)
+    return solve_lp_stacked(*stacked, max_iters=max_iters, tol=tol,
+                            linsolve=linsolve, row_active=row_active)
 
 
 # Back-compat variant: same constraint structure, different rhs h (the
 # epsilon-constraint cost grid).  Thin wrapper over the stacked engine.
 def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
-                     *, max_iters: int = _MAX_ITERS):
+                     *, max_iters: int = _MAX_ITERS, linsolve: str = "xla"):
     return solve_lp_stacked(c, a_eq, b_eq, g, h_batch, lb, ub,
-                            max_iters=max_iters)
+                            max_iters=max_iters, linsolve=linsolve)
 
 
 def scipy_reference_lp(c, a_eq, b_eq, g, h, lb, ub):

@@ -58,10 +58,10 @@ class MILPResult:
 # Node LP solve (JAX IPM with HiGHS fallback)
 # ---------------------------------------------------------------------------
 
-def _solve_node(node, prefer_jax: bool = True):
+def _solve_node(node, prefer_jax: bool = True, linsolve: str = "xla"):
     """Returns (x, obj, status) with status in {ok, infeasible}."""
     if prefer_jax:
-        sol = lpmod.solve_node_lp(node)
+        sol = lpmod.solve_node_lp(node, linsolve=linsolve)
         if bool(sol.converged):
             return np.asarray(sol.x), float(sol.obj), "ok"
     res = lpmod.scipy_reference_lp(node.c, node.a_eq, node.b_eq, node.g,
@@ -219,7 +219,8 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
               time_limit_s: float = 120.0, prefer_jax: bool = True,
               warm_alloc: Optional[np.ndarray] = None,
               lower_bound0: Optional[float] = None,
-              pinned: Optional[np.ndarray] = None
+              pinned: Optional[np.ndarray] = None,
+              linsolve: str = "xla"
               ) -> MILPResult:
     """Structure-exploiting branch & bound.
 
@@ -232,7 +233,8 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
     immediately with zero nodes.  ``pinned`` is a (mu, tau) bool mask of
     setup binaries fixed to 0 at the ROOT (inherited by every node) —
     dead platforms / empty fleet slots, see
-    :func:`repro.core.scenarios.dead_pin_mask`.
+    :func:`repro.core.scenarios.dead_pin_mask`.  ``linsolve`` picks the
+    node LPs' Newton linear-system backend (:data:`repro.core.lp.LINSOLVES`).
     """
     t0 = time.monotonic()
     mu, tau = problem.mu, problem.tau
@@ -267,7 +269,7 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
         nodes += 1
         node = problem.node_lp(cost_cap, nd["b0"], nd["b1"],
                                nd["d_lb"], nd["d_ub"])
-        x, obj, st = _solve_node(node, prefer_jax)
+        x, obj, st = _solve_node(node, prefer_jax, linsolve)
         if st == "infeasible":
             continue
         if obj >= inc_mk * (1 - gap_tol):
@@ -305,7 +307,9 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
                     batch_width: Optional[int] = None,
                     lp_tol: float = 1e-7,
                     prefer_jax: bool = True,
-                    pinned: Optional[np.ndarray] = None) -> list:
+                    pinned: Optional[np.ndarray] = None,
+                    linsolve: str = "xla",
+                    early_exit: bool = True) -> list:
     """Run one B&B tree per budget cap IN LOCKSTEP: each round pops the
     best open node from every active tree and solves all node relaxations
     as a single fixed-width batched interior-point call
@@ -331,6 +335,23 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
     (dead platforms / empty fleet slots).  ``time_limit_s`` covers the
     whole sweep.  Returns a list of :class:`MILPResult`, one per cap, in
     input order.
+
+    ``linsolve`` picks the stacked IPM's Newton backend
+    (:data:`repro.core.lp.LINSOLVES`).  With ``early_exit`` (default on)
+    each round's batch is compacted: the popped nodes occupy the leading
+    rows and the fixed-width padding is marked inactive via the solver's
+    ``row_active`` mask, so retired rows are charged zero Newton
+    iterations in the ``lp.newton_row_stats`` ledger instead of
+    duplicating row 0's whole solve.  Note the ledger counts *useful*
+    work: a vmapped ``while_loop`` on CPU still computes (and
+    select-masks) every SIMD row each trip, so early exit does not
+    change wall clock there — it quantifies exactly the work a
+    lane-skipping accelerator backend or a future mid-call compaction
+    avoids.  Active rows' iterates are bit-identical either way (rows of
+    a vmapped solve are independent), which the regression tests in
+    ``tests/test_milp.py`` assert.  The mask is traced, so early exit
+    never recompiles (``lp.stacked_compile_count`` stays flat as rows
+    retire mid-sweep).
     """
     t0 = time.monotonic()
     caps = [None if c is None else float(c) for c in caps]
@@ -438,7 +459,12 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
         # need bounding accuracy well inside gap_tol, and the whole batch
         # iterates until its SLOWEST member converges.
         batch = lps + [lps[0]] * (batch_width - len(lps))
-        sols = lpmod.solve_node_lps_stacked(batch, tol=lp_tol)
+        active = None
+        if early_exit:
+            active = np.arange(batch_width) < len(lps)
+        sols = lpmod.solve_node_lps_stacked(batch, tol=lp_tol,
+                                            linsolve=linsolve,
+                                            row_active=active)
         xs = np.asarray(sols.x)
         objs = np.asarray(sols.obj)
         conv = np.asarray(sols.converged)

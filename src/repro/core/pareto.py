@@ -117,7 +117,8 @@ def milp_tradeoff(problem: AllocationProblem, n_points: int = 8,
 
 
 def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
-                        *, return_solutions: bool = False):
+                        *, return_solutions: bool = False,
+                        linsolve: str = "xla"):
     """Instant LOWER-BOUND frontier: the LP relaxation of Eq. 4 solved for
     every cost cap in ONE vmapped interior-point call (the epsilon grid
     shares the constraint matrix; only the budget rhs varies).
@@ -135,7 +136,8 @@ def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
     h_batch = np.tile(np.asarray(node.h), (len(caps), 1))
     h_batch[:, -1] = caps
     sols = lpmod.solve_lp_stacked(node.c, node.a_eq, node.b_eq, node.g,
-                                  h_batch, node.lb, node.ub)
+                                  h_batch, node.lb, node.ub,
+                                  linsolve=linsolve)
     if return_solutions:
         return caps, np.asarray(sols.obj), sols
     return caps, np.asarray(sols.obj)
@@ -192,13 +194,18 @@ def milp_tradeoff_batched(problem: AllocationProblem, n_points: int = 8,
     from the batched relaxation (lower bound + rounded allocation) and
     from its sweep neighbour's incumbent, so most points close at the
     root with zero nodes.  Results match :func:`milp_tradeoff` within
-    solver tolerance.
+    solver tolerance.  A ``linsolve=`` kwarg routes every stacked Newton
+    solve — relaxation grid and lockstep node batches alike — through the
+    chosen backend (:data:`repro.core.lp.LINSOLVES`).
     """
     if backend != "bnb":
+        kw.pop("linsolve", None)
+        kw.pop("early_exit", None)
         return milp_tradeoff(problem, n_points, backend=backend, **kw)
     c_l, c_u, top = cost_bounds_batched(problem, **kw)
     caps = np.linspace(c_l, max(c_u, c_l), n_points)
-    _, lbs, sols = relaxation_frontier(problem, caps, return_solutions=True)
+    _, lbs, sols = relaxation_frontier(problem, caps, return_solutions=True,
+                                       linsolve=kw.get("linsolve", "xla"))
     xs = np.asarray(sols.x)
     relax_allocs = [problem.split_node_x(xs[k])[0] for k in range(len(caps))]
     points = _warm_sweep(problem, caps, lbs, relax_allocs, top, **kw)
@@ -221,7 +228,8 @@ def _as_scenario_set(scenarios):
     return ScenarioSet(tuple(scenarios))
 
 
-def _batched_scenario_relaxation(probs, caps_list, dead_masks):
+def _batched_scenario_relaxation(probs, caps_list, dead_masks,
+                                 linsolve: str = "xla"):
     """One stacked IPM call across every (scenario, budget) pair.
 
     Returns (lbs (S, K), relax_allocs (S, K) list-of-lists).  Dead
@@ -238,7 +246,7 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks):
             h = np.array(base.h)
             h[-1] = float(ck)
             nodes.append(base._replace(h=h))
-    sols = lpmod.solve_node_lps_stacked(nodes)
+    sols = lpmod.solve_node_lps_stacked(nodes, linsolve=linsolve)
     s, k = len(probs), len(caps_list[0])
     lbs = np.asarray(sols.obj).reshape(s, k)
     xs = np.asarray(sols.x).reshape(s, k, -1)
@@ -248,7 +256,8 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks):
 
 
 def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
-                                  n_points: int = 8):
+                                  n_points: int = 8,
+                                  linsolve: str = "xla"):
     """LP-relaxation (lower-bound) frontier per scenario, ALL scenarios
     and budget points solved in a single batched interior-point call.
 
@@ -261,7 +270,7 @@ def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
     caps_list = [np.linspace(*_cheap_cost_bounds(p, s.dead), n_points)
                  for p, s in zip(probs, scen)]
     lbs, _ = _batched_scenario_relaxation(
-        probs, caps_list, [s.dead for s in scen])
+        probs, caps_list, [s.dead for s in scen], linsolve=linsolve)
     return {s.name: (caps_list[i], lbs[i]) for i, s in enumerate(scen)}
 
 
@@ -280,7 +289,8 @@ def scenario_frontiers(problem: AllocationProblem, scenarios,
     caps_list = [np.linspace(c_l, max(c_u, c_l), n_points)
                  for c_l, c_u, _ in bounds]
     lbs, relax_allocs = _batched_scenario_relaxation(
-        probs, caps_list, [s.dead for s in scen])
+        probs, caps_list, [s.dead for s in scen],
+        linsolve=kw.get("linsolve", "xla"))
     out = {}
     for i, s in enumerate(scen):
         c_l, c_u, top = bounds[i]

@@ -2,6 +2,9 @@
 
 mc_pricing: the paper's Monte Carlo workload (Philox4x32 in-kernel RNG,
 (8,128) VMEM path tiles).  flash_attention: blocked-softmax attention
-(GQA/causal/sliding-window).  Validated with interpret=True on CPU;
-`ops.py` is the jit'd public surface, `ref.py` the oracles.
+(GQA/causal/sliding-window).  batched_chol: blocked batched-Cholesky
+factorisation + triangular solves over the stacked IPM's (B, m, m)
+normal-equation matrices (the ``linsolve="pallas"`` backend of
+repro.core.lp).  Validated with interpret=True on CPU; `ops.py` is the
+jit'd public surface, `ref.py` the oracles.
 """

@@ -12,6 +12,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import batched_chol as _bc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mc_pricing as _mc
 from repro.kernels import ref as _ref
@@ -38,6 +39,18 @@ def mc_price(params: jnp.ndarray, *, kind_id: int, steps: int,
     var = jnp.maximum(sumsqs / n - mean * mean, 0.0)
     stderr = jnp.sqrt(var / n)
     return mean, stderr
+
+
+def chol_solve(mats, rhs, *, use_pallas: bool = True,
+               block: int = _bc.DEFAULT_BLOCK):
+    """Batched SPD solve (``mats`` (B, m, m) or (m, m)); Pallas blocked
+    Cholesky kernel or the XLA factor+triangular-solve reference.  This is
+    the ``linsolve="pallas"`` backend of the stacked IPM
+    (:func:`repro.core.lp.solve_lp_stacked`)."""
+    if use_pallas:
+        return _bc.chol_solve(mats, rhs, block=block,
+                              interpret=not _on_tpu())
+    return _ref.chol_solve_ref(mats, rhs)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -81,6 +81,23 @@ def mc_price_sums_ref(params: jnp.ndarray, *, kind_id: int, steps: int,
     return sums, sumsqs
 
 
+def chol_factor_ref(mats: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.batched_chol.chol_factor: lower Cholesky factor
+    of a (possibly batched) SPD stack through XLA's native decomposition —
+    an independent code path from the kernel's blocked algorithm."""
+    return jnp.linalg.cholesky(jnp.asarray(mats))
+
+
+def chol_solve_ref(mats: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.batched_chol.chol_solve: factor + two batched
+    triangular solves (``mats`` (..., m, m) SPD, ``rhs`` (..., m))."""
+    from jax.scipy.linalg import solve_triangular
+    l = chol_factor_ref(mats)
+    y = solve_triangular(l, jnp.asarray(rhs)[..., None], lower=True)
+    x = solve_triangular(jnp.swapaxes(l, -1, -2), y, lower=False)
+    return x[..., 0]
+
+
 def attention_ref(q, k, v, *, causal: bool = True, scale=None,
                   window: int = 0):
     """Reference multi-head attention with GQA, causal and optional

@@ -93,11 +93,13 @@ class StaticPolicy(Policy):
     node_limit: int = 120
     time_limit_s: float = 30.0
     name: str = "static"
+    linsolve: str = "xla"
 
     def __post_init__(self):
         self._planner = WarmMILPPolicy(n_caps=self.n_caps,
                                        node_limit=self.node_limit,
-                                       time_limit_s=self.time_limit_s)
+                                       time_limit_s=self.time_limit_s,
+                                       linsolve=self.linsolve)
 
     def reset(self, view: View) -> np.ndarray:
         self._alloc = self._planner.reset(view)
@@ -158,6 +160,10 @@ class WarmMILPPolicy(Policy):
     lp_tol: float = 1e-7
     cap_headroom: float = 1.25
     name: str = "warm_milp"
+    # Newton linear-system backend for every stacked solve this policy
+    # issues (relaxation grid + lockstep node batches); see
+    # :data:`repro.core.lp.LINSOLVES`.
+    linsolve: str = "xla"
 
     def __post_init__(self):
         self._alloc: Optional[np.ndarray] = None
@@ -168,7 +174,7 @@ class WarmMILPPolicy(Policy):
         caps = np.linspace(c_l, max(c_u, c_l) * self.cap_headroom,
                            self.n_caps)
         lbs, relax_allocs = pareto._batched_scenario_relaxation(
-            [p], [caps], [dead])
+            [p], [caps], [dead], linsolve=self.linsolve)
         prev = None
         if self._alloc is not None:
             prev = _mask_to_alive(p, self._alloc, dead)
@@ -180,7 +186,7 @@ class WarmMILPPolicy(Policy):
             lower_bounds0=[float(v) for v in lbs[0]],
             pinned=pin, batch_width=self.n_caps,
             node_limit=self.node_limit, time_limit_s=self.time_limit_s,
-            lp_tol=self.lp_tol)
+            lp_tol=self.lp_tol, linsolve=self.linsolve)
         # the masked previous plan stays in the running: continuity when
         # it is still the cheapest SLO-feasible choice (no churn), and
         # the budget grid can never force a strictly worse plan
@@ -241,6 +247,7 @@ class FrontierLookupPolicy(Policy):
     node_limit: int = 80
     time_limit_s: float = 30.0
     name: str = "frontier_lookup"
+    linsolve: str = "xla"
 
     def _anticipated_problem(self, view: View) -> AllocationProblem:
         p = view.problem
@@ -287,7 +294,7 @@ class FrontierLookupPolicy(Policy):
         self._frontiers = pareto.scenario_frontiers(
             self._anticipated_problem(view), self._battery_set,
             n_points=self.n_points, node_limit=self.node_limit,
-            time_limit_s=self.time_limit_s)
+            time_limit_s=self.time_limit_s, linsolve=self.linsolve)
         return self.replan(view, None)
 
     def replan(self, view: View, event) -> np.ndarray:

@@ -177,7 +177,8 @@ class Fleet:
 
 def slo_for_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
                     episode: ev.MarketEpisode, *,
-                    penalty_factor: float = 2.0
+                    penalty_factor: float = 2.0,
+                    linsolve: str = "xla"
                     ) -> Tuple[float, float]:
     """(slo_latency, sla_penalty_rate) anchors for an episode.
 
@@ -195,7 +196,8 @@ def slo_for_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
     mk_split, cost_split = heuristics.evaluate(
         p, heuristics.proportional_split(p, w))
     sol = lpmod.solve_node_lp(p.node_lp(
-        None, b_fixed0=dead_pin_mask(fleet.dead, p.tau)))
+        None, b_fixed0=dead_pin_mask(fleet.dead, p.tau)),
+        linsolve=linsolve)
     lb = float(sol.obj) if bool(sol.converged) else mk_split * 0.5
     slo = float(np.sqrt(max(lb, 1e-9) * mk_split))
     return slo, penalty_factor * cost_split / mk_split
@@ -243,7 +245,8 @@ class EpisodeResult:
 def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
                 episode: ev.MarketEpisode, policy, *,
                 slo_latency: float,
-                task_names=None) -> EpisodeResult:
+                task_names=None,
+                linsolve: Optional[str] = None) -> EpisodeResult:
     """Replay an episode against a policy.
 
     The loop alternates: close the current inter-event interval under
@@ -251,7 +254,18 @@ def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
     The policy's ``replan`` may return its previous allocation (cheap
     no-op); the standing allocation is always evaluated against the TRUE
     current fleet, so un-replanned stranded work costs what it should.
+
+    ``linsolve`` (optional) pushes a Newton linear-system backend
+    (:data:`repro.core.lp.LINSOLVES`) onto the policy before the episode
+    starts — the one-line way to replay a whole episode through the
+    Pallas batched-Cholesky path.  Policies without solver backends
+    (e.g. the heuristic re-split) ignore it.
     """
+    if linsolve is not None and hasattr(policy, "linsolve"):
+        policy.linsolve = linsolve
+        post = getattr(policy, "__post_init__", None)
+        if post is not None:       # re-seed helpers built from linsolve
+            post()
     fleet = Fleet.from_episode(catalog, n, episode, task_names)
     view = fleet.view(0.0, slo_latency)
     t0 = _time.perf_counter()

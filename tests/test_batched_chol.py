@@ -1,0 +1,175 @@
+"""Solver-parity battery: Pallas blocked batched-Cholesky kernel vs the
+pure-jnp oracle (kernels/ref.py) vs jnp.linalg, and the stacked IPM
+across every ``linsolve`` backend."""
+import numpy as np
+import pytest
+
+from repro.core import lp
+from repro.kernels import batched_chol as bc
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _spd(rng, m, cond=None):
+    """Random SPD (m, m); ``cond`` forces the spectrum's condition number."""
+    q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    if cond is None:
+        eig = rng.uniform(1.0, 10.0, size=m)
+    else:
+        eig = np.logspace(0.0, np.log10(cond), m)
+    a = (q * eig) @ q.T
+    return (a + a.T) / 2
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle vs jnp.linalg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 3, 8, 13, 24, 33])
+@pytest.mark.parametrize("batch", [1, 3, 7])
+def test_kernel_matches_oracle_and_lapack(m, batch):
+    rng = np.random.default_rng(m * 100 + batch)
+    mats = np.stack([_spd(rng, m) for _ in range(batch)])
+    rhs = rng.normal(size=(batch, m))
+    x_kern = np.asarray(bc.chol_solve(mats, rhs))
+    x_ref = np.asarray(ref.chol_solve_ref(mats, rhs))
+    x_la = np.linalg.solve(mats, rhs[..., None])[..., 0]
+    scale = np.abs(x_la).max() + 1.0
+    assert np.abs(x_kern - x_ref).max() < 1e-10 * scale
+    assert np.abs(x_kern - x_la).max() < 1e-10 * scale
+
+
+@pytest.mark.parametrize("m", [5, 16, 29])
+def test_factor_matches_oracle(m):
+    rng = np.random.default_rng(m)
+    mats = np.stack([_spd(rng, m) for _ in range(3)])
+    l_kern = np.asarray(bc.chol_factor(mats))
+    l_ref = np.asarray(ref.chol_factor_ref(mats))
+    assert np.abs(np.triu(l_kern, 1)).max() == 0.0       # strictly lower
+    np.testing.assert_allclose(l_kern, l_ref, atol=1e-10)
+    rec = l_kern @ l_kern.transpose(0, 2, 1)
+    np.testing.assert_allclose(rec, mats, atol=1e-10)
+
+
+@pytest.mark.parametrize("block", [4, 8, 16])
+def test_block_size_invariance(block):
+    """The blocked recursion must give the same factor for any tiling."""
+    rng = np.random.default_rng(7)
+    a = _spd(rng, 21)
+    b = rng.normal(size=21)
+    x = np.asarray(bc.chol_solve(a, b, block=block))
+    np.testing.assert_allclose(x, np.linalg.solve(a, b), atol=1e-10)
+
+
+@pytest.mark.parametrize("cond", [1e6, 1e10])
+def test_ill_conditioned(cond):
+    """Accuracy degrades gracefully with conditioning (relative error
+    ~cond * eps), exactly like the lapack reference."""
+    rng = np.random.default_rng(int(np.log10(cond)))
+    mats = np.stack([_spd(rng, 24, cond=cond) for _ in range(3)])
+    rhs = rng.normal(size=(3, 24))
+    x_kern = np.asarray(bc.chol_solve(mats, rhs))
+    x_la = np.linalg.solve(mats, rhs[..., None])[..., 0]
+    rel = np.abs(x_kern - x_la).max() / (np.abs(x_la).max() + 1.0)
+    assert rel < cond * 1e-13
+
+
+def test_ops_wrapper_dispatches():
+    rng = np.random.default_rng(0)
+    mats = np.stack([_spd(rng, 9) for _ in range(2)])
+    rhs = rng.normal(size=(2, 9))
+    x_pal = np.asarray(ops.chol_solve(mats, rhs, use_pallas=True))
+    x_ref = np.asarray(ops.chol_solve(mats, rhs, use_pallas=False))
+    np.testing.assert_allclose(x_pal, x_ref, atol=1e-10)
+
+
+if HAVE_HYPOTHESIS:
+    @given(m=st.integers(1, 20), batch=st.integers(1, 4),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=15, deadline=None)
+    def test_kernel_property(m, batch, seed):
+        rng = np.random.default_rng(seed)
+        mats = np.stack([_spd(rng, m) for _ in range(batch)])
+        rhs = rng.normal(size=(batch, m))
+        x = np.asarray(bc.chol_solve(mats, rhs))
+        resid = np.abs(mats @ x[..., None] - rhs[..., None]).max()
+        assert resid < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Stacked IPM parity across linsolve backends
+# ---------------------------------------------------------------------------
+
+def _random_lp(seed, n=24, meq=6, mineq=10, ub_frac=0.5):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(meq, n))
+    x0 = rng.uniform(0.1, 0.9, size=n)
+    b = a @ x0
+    g = rng.normal(size=(mineq, n))
+    h = g @ x0 + rng.uniform(0.05, 1.0, size=mineq)
+    c = rng.normal(size=n)
+    lb = np.zeros(n)
+    ub = np.full(n, np.inf)
+    ub[rng.random(n) < ub_frac] = rng.uniform(1.0, 3.0)
+    return c, a, b, g, h, lb, ub
+
+
+def test_stacked_ipm_identical_across_backends():
+    """solve_lp_stacked must agree across every backend to 1e-8 — the
+    acceptance bar for swapping the Newton solver under a sweep."""
+    probs = [_random_lp(seed) for seed in (21, 22, 23)]
+    stacked = [np.stack(arrs) for arrs in zip(*probs)]
+    base = lp.solve_lp_stacked(*stacked, linsolve="xla")
+    x0, obj0 = np.asarray(base.x), np.asarray(base.obj)
+    for backend in ("ref", "pallas", "pallas-interpret"):
+        sols = lp.solve_lp_stacked(*stacked, linsolve=backend)
+        assert np.abs(np.asarray(sols.obj) - obj0).max() < 1e-8
+        assert np.abs(np.asarray(sols.x) - x0).max() < 1e-8
+        assert np.asarray(sols.iters).tolist() == \
+            np.asarray(base.iters).tolist()
+
+
+def test_single_lp_across_backends():
+    prob = _random_lp(31)
+    ref_sol = lp.scipy_reference_lp(*prob)
+    for backend in lp.LINSOLVES:
+        sol = lp.solve_lp(*prob, linsolve=backend)
+        assert bool(sol.converged), backend
+        assert abs(float(sol.obj) - ref_sol.fun) < 1e-5 * (1 + abs(ref_sol.fun))
+
+
+def test_node_lp_fixture_across_backends():
+    """Tier-1 LP fixture (an actual B&B node LP) through every backend."""
+    from repro.core.problem import AllocationProblem
+    rng = np.random.default_rng(5)
+    mu, tau = 4, 6
+    p = AllocationProblem(rng.uniform(1e-6, 1e-4, (mu, tau)),
+                          rng.uniform(0.1, 5.0, (mu, tau)),
+                          rng.uniform(1e5, 1e7, tau),
+                          rng.uniform(60, 600, mu),
+                          rng.uniform(0.01, 0.1, mu))
+    nodes = [p.node_lp(cost_cap=50.0 + 10 * k) for k in range(3)]
+    base = lp.solve_node_lps_stacked(nodes, linsolve="xla")
+    for backend in ("ref", "pallas"):
+        sols = lp.solve_node_lps_stacked(nodes, linsolve=backend)
+        # the node LPs have degenerate optimal faces, so compare the
+        # OBJECTIVE (unique) to 1e-8; the primal point may sit anywhere
+        # on the face — assert it is feasible-equivalent instead.
+        assert np.abs(np.asarray(sols.obj) - np.asarray(base.obj)).max() \
+            < 1e-8 * (1 + np.abs(np.asarray(base.obj)).max())
+        assert np.asarray(sols.converged).all()
+        for k, node in enumerate(nodes):
+            alloc, _, _ = p.split_node_x(np.asarray(sols.x[k]))
+            np.testing.assert_allclose(alloc.sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_unknown_backend_rejected():
+    prob = _random_lp(1)
+    with pytest.raises(ValueError):
+        lp.solve_lp(*prob, linsolve="qr")

@@ -117,6 +117,59 @@ def test_pinned_variable_upper_bounds():
         assert float(sol.x[0]) < 1e-6
 
 
+def test_stacked_linsolve_backends_agree():
+    """Every tier-1 stacked fixture must solve identically (1e-8) under
+    the pluggable Newton backends — the sweep can swap them freely."""
+    c, a, b, g, h, lb, ub = _random_lp(5)
+    hs = np.stack([h, h + 0.5, h + 1.0])
+    base = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub, linsolve="xla")
+    for backend in ("ref", "pallas", "pallas-interpret"):
+        sols = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub, linsolve=backend)
+        assert np.abs(np.asarray(sols.obj) - np.asarray(base.obj)).max() \
+            < 1e-8
+        assert np.abs(np.asarray(sols.x) - np.asarray(base.x)).max() < 1e-8
+
+
+def test_row_active_mask_freezes_rows():
+    """Inactive rows retire at iteration 0; active rows are bit-identical
+    to the unmasked solve (vmapped rows are independent)."""
+    c, a, b, g, h, lb, ub = _random_lp(6)
+    hs = np.stack([h, h + 0.25, h + 0.75])
+    full = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub)
+    masked = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub,
+                                 row_active=[True, False, True])
+    assert int(masked.iters[1]) == 0
+    for i in (0, 2):
+        assert float(masked.obj[i]) == float(full.obj[i])
+        np.testing.assert_array_equal(np.asarray(masked.x[i]),
+                                      np.asarray(full.x[i]))
+
+
+def test_row_active_rejects_bad_shape():
+    c, a, b, g, h, lb, ub = _random_lp(6)
+    hs = np.stack([h, h + 0.25])
+    with pytest.raises(ValueError):
+        lp.solve_lp_stacked(c, a, b, g, hs, lb, ub,
+                            row_active=[True, False, True])
+
+
+def test_newton_row_stats_ledger():
+    lp.reset_newton_row_stats()
+    c, a, b, g, h, lb, ub = _random_lp(7)
+    hs = np.stack([h, h + 0.5, h + 1.0, h + 2.0])
+    sols = lp.solve_lp_stacked(c, a, b, g, hs, lb, ub,
+                               row_active=[True, True, False, False])
+    stats = lp.newton_row_stats()
+    iters = np.asarray(sols.iters)
+    assert stats["calls"] == 1
+    assert stats["active_rows"] == int(iters[:2].sum())
+    assert stats["lockstep_rows"] == 4 * int(iters[:2].max())
+    assert stats["active_rows"] < stats["lockstep_rows"]
+    assert sum(stats["hist"].values()) == 2      # one bucket entry per row
+    lp.reset_newton_row_stats()
+    assert lp.newton_row_stats()["calls"] == 0
+
+
 def test_node_lp_shape_roundtrip():
     from repro.core.problem import AllocationProblem
     rng = np.random.default_rng(0)

@@ -201,6 +201,73 @@ def test_sweep_priority_refill_results_unchanged():
                                        atol=1e-6)
 
 
+def test_sweep_early_exit_bit_matches():
+    """Per-row early exit must not change WHAT the sweep computes: every
+    budget point's allocation, objectives and node count bit-match the
+    non-early-exit path (padding rows were always discarded; active rows
+    of a vmapped solve are independent of their batch-mates)."""
+    from repro.core import lp
+    p = random_problem(40)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 4)
+    kw = dict(node_limit=150, time_limit_s=30)
+    on = milp.solve_bnb_sweep(p, caps, early_exit=True, **kw)
+    n_compiled = lp.stacked_compile_count()
+    off = milp.solve_bnb_sweep(p, caps, early_exit=False, **kw)
+    for a, b in zip(on, off):
+        if a.alloc is None:
+            assert b.alloc is None
+            continue
+        np.testing.assert_array_equal(a.alloc, b.alloc)
+        assert a.makespan == b.makespan
+        assert a.cost == b.cost
+        assert a.nodes == b.nodes
+    # the row_active mask is traced: rows retiring mid-sweep (and turning
+    # the mask off entirely) must never trigger a recompile
+    assert lp.stacked_compile_count() == n_compiled
+
+
+def test_sweep_early_exit_matches_serial_and_saves_rows():
+    """Early-exit sweep vs one serial B&B per cap: identical answers
+    (within solver tolerance), strictly fewer Newton rows than lockstep
+    accounting."""
+    from repro.core import lp
+    p = random_problem(41)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 3)
+    kw = dict(node_limit=150, time_limit_s=30)
+    lp.reset_newton_row_stats()
+    sweep = milp.solve_bnb_sweep(p, caps, **kw)
+    stats = lp.newton_row_stats()
+    assert stats["calls"] >= 1
+    assert stats["active_rows"] < stats["lockstep_rows"]
+    for ck, rb in zip(caps, sweep):
+        rs = milp.solve_bnb(p, float(ck), **kw)
+        if rs.alloc is None:
+            continue
+        assert rb.alloc is not None
+        assert rb.makespan <= rs.makespan * 1.02 + 1e-9
+        assert rb.cost <= ck * (1 + 1e-6)
+
+
+def test_sweep_linsolve_backends_agree():
+    """The whole lockstep sweep through the Pallas batched-Cholesky
+    backend lands on the same frontier as the xla backend."""
+    p = random_problem(42)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 3)
+    kw = dict(node_limit=100, time_limit_s=30)
+    base = milp.solve_bnb_sweep(p, caps, linsolve="xla", **kw)
+    pall = milp.solve_bnb_sweep(p, caps, linsolve="pallas", **kw)
+    for a, b in zip(base, pall):
+        if a.alloc is None:
+            assert b.alloc is None
+            continue
+        assert abs(a.makespan - b.makespan) <= 1e-6 * a.makespan + 1e-9
+        assert b.cost <= (a.cost * (1 + 1e-6)) + 1e-9 or \
+            b.cost <= caps.max() * (1 + 1e-6)
+
+
 def test_pinned_root_excludes_platforms():
     """A root pin (dead platform / empty fleet slot) must keep every
     incumbent and node solve off the pinned rows, and match the solve of

@@ -190,6 +190,23 @@ def run() -> list:
     rows.append((f"market.replan.{len(views)}views.serial",
                  wall_serial * 1e6 / len(views),
                  f"speedup={wall_serial / max(wall_batched, 1e-12):.2f}x"))
+
+    # -- the same replan loop through the chunked compacted driver
+    # (compact=True threads down to every stacked solve; narrow n_caps
+    # batches on CPU mostly measure chunking overhead — the win lives on
+    # wide skewed batches, see solver_bench's chunked rows)
+    compact_policy = WarmMILPPolicy(n_caps=n_caps, node_limit=node_limit,
+                                    time_limit_s=time_limit, compact=True)
+    compact_policy.reset(views[0])         # compile + warm the ladder
+    t0 = time.perf_counter()
+    compact_policy._alloc = None
+    for view in views:
+        compact_policy._plan(view)
+    wall_compact = time.perf_counter() - t0
+    rows.append((f"market.replan.{len(views)}views.compact",
+                 wall_compact * 1e6 / len(views),
+                 f"vs_batched="
+                 f"{wall_batched / max(wall_compact, 1e-12):.2f}x"))
     return rows
 
 

@@ -21,11 +21,17 @@ def main() -> None:
                          "benchmark (reproducible CI artifacts)")
     ap.add_argument("--out", default=None,
                     help="also write the CSV to this path")
+    ap.add_argument("--json-out", default=None,
+                    help="also write a JSON timing artifact (e.g. "
+                         "BENCH_solver.json) with every row plus run "
+                         "metadata — the machine-readable bench "
+                         "trajectory uploaded from CI")
     args = ap.parse_args()
-    if args.out:
-        # fail fast on an unwritable path, not after minutes of benchmarks
-        with open(args.out, "w"):
-            pass
+    for path in (args.out, args.json_out):
+        if path:
+            # fail fast on an unwritable path, not after minutes of benchmarks
+            with open(path, "w"):
+                pass
     if args.smoke:
         # must precede benchmark imports: common.SMOKE is read at import
         os.environ["REPRO_BENCH_SMOKE"] = "1"
@@ -68,6 +74,26 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             f.write("\n".join(lines) + "\n")
+    if args.json_out:
+        import json
+        rows_json = []
+        for line in lines[1:]:
+            name, us, derived = line.split(",", 2)
+            try:
+                us_f = float(us)
+            except ValueError:
+                us_f = None
+            rows_json.append({"name": name, "us_per_call": us_f,
+                              "derived": derived})
+        payload = {
+            "meta": {"smoke": bool(args.smoke),
+                     "seed": int(os.environ.get("REPRO_BENCH_SEED", "0")),
+                     "failed_modules": failed},
+            "rows": rows_json,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
     if failed:
         sys.exit(1)
 

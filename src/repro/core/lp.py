@@ -10,9 +10,29 @@ w for x <= u), so the normal-equation matrix stays (m x m) with
 m = #rows(A_eq) + #rows(G) — this is what makes the B&B node solves cheap
 (DESIGN.md §2).  jit-compiled with ``lax.while_loop``; ``vmap``-able across a
 batch of right-hand sides (the epsilon-constraint cost grid).
+
+Two stacked execution drivers share the same per-iteration math:
+
+* the **monolithic** driver — one jitted, vmapped call whose lockstep
+  ``while_loop`` iterates until the SLOWEST active row converges (every
+  row pays every trip, select-masked once retired);
+* the **chunked** driver (``compact=True``) — Newton steps run in
+  fixed-size chunks and between chunks the batch is *compacted*: rows
+  that converged are written out and the survivors are gathered into the
+  smallest buffer of a fixed power-of-two width ladder, so late trips
+  are paid only by the stragglers.  Every ladder width is pre-compiled
+  on first use, keeping :func:`stacked_compile_count` flat thereafter.
+
+Orthogonally, ``newton_dtype="float32"`` switches the Newton
+normal-equation solves to a mixed-precision path: factor/solve in
+float32 with one float64 iterative-refinement step, falling back to the
+full float64 path per row once the barrier parameter is small (the
+normal matrix conditioning grows like 1/mu^2) or whenever the refined
+residual exceeds tolerance.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import NamedTuple
 
@@ -24,6 +44,7 @@ _ETA = 0.99995          # fraction-to-boundary
 _MAX_ITERS = 100
 _TOL = 1e-9
 _INF_UB = 1e30          # finite stand-in for +inf upper bounds
+_CHUNK_ITERS = 8        # default chunk length of the compacted driver
 
 # Pluggable Newton linear-system backends.  "xla" is the historical
 # jnp.linalg.solve (batched LU through lapack on CPU); "ref" is the
@@ -33,12 +54,39 @@ _INF_UB = 1e30          # finite stand-in for +inf upper bounds
 # everywhere (the CI validation path).
 LINSOLVES = ("xla", "ref", "pallas", "pallas-interpret")
 
+# Newton normal-equation precisions.  "float64" is the direct solve;
+# "float32" is the mixed-precision path: f32 factor/solve + one f64
+# iterative-refinement step per solve, with a per-row fall-back to full
+# f64 once mu <= _F32_SWITCH_MU (the normal matrix conditions like
+# 1/mu^2, so a float32 factorisation cannot polish to tight tolerances)
+# or as soon as a refined residual exceeds _F32_REFINE_RTOL.
+NEWTON_DTYPES = ("float64", "float32")
+_F32_SWITCH_MU = 1e-5
+_F32_REFINE_RTOL = 1e-6
+
+
+def _canon_newton_dtype(newton_dtype) -> str:
+    """Normalise a ``newton_dtype`` knob ("f32", jnp.float32, ...) to one
+    of :data:`NEWTON_DTYPES`."""
+    if newton_dtype is None:
+        return "float64"
+    if isinstance(newton_dtype, str):
+        s = {"f32": "float32", "f64": "float64"}.get(newton_dtype,
+                                                    newton_dtype)
+    else:
+        s = jnp.dtype(newton_dtype).name
+    if s not in NEWTON_DTYPES:
+        raise ValueError(f"unknown newton_dtype {newton_dtype!r}; "
+                         f"expected one of {NEWTON_DTYPES}")
+    return s
+
 
 def _newton_linsolve(linsolve: str, m_mat, rhs):
     """One normal-equation solve ``M dy = rhs`` under the chosen backend.
     Called inside the (possibly vmapped) IPM iteration: under ``vmap`` the
     Pallas path batches into ONE kernel launch over the stacked (B, m, m)
-    matrices instead of B independent solves."""
+    matrices instead of B independent solves.  The solve runs in the
+    dtype of ``m_mat`` (the mixed-precision path passes float32 here)."""
     if linsolve == "xla":
         return jnp.linalg.solve(m_mat, rhs)
     if linsolve in ("ref", "pallas"):
@@ -50,6 +98,54 @@ def _newton_linsolve(linsolve: str, m_mat, rhs):
         return _bc.chol_solve(m_mat, rhs, interpret=True)
     raise ValueError(f"unknown linsolve backend {linsolve!r}; "
                      f"expected one of {LINSOLVES}")
+
+
+def _chol_factor32(linsolve: str, m32):
+    """Float32 Cholesky factor of one SPD normal matrix through the
+    chosen backend's factorisation machinery (the O(m^3) part of the
+    mixed-precision solve; the refinement reuses this factor)."""
+    if linsolve == "xla":
+        return jnp.linalg.cholesky(m32)
+    if linsolve == "ref":
+        from repro.kernels import ref as _kref
+        return _kref.chol_factor_ref(m32)
+    if linsolve in ("pallas", "pallas-interpret"):
+        from repro.kernels import batched_chol as _bc
+        interpret = (linsolve == "pallas-interpret"
+                     or jax.default_backend() != "tpu")
+        return _bc.chol_factor(m32, interpret=interpret)
+    raise ValueError(f"unknown linsolve backend {linsolve!r}; "
+                     f"expected one of {LINSOLVES}")
+
+
+def _newton_solve(linsolve: str, newton_dtype: str, m_mat, rhs):
+    """One Newton solve at the requested precision.
+
+    Returns ``(dy, rel_resid)``: the f64 path solves directly and reports
+    a zero residual; the f32 path factors ONCE in float32 and reuses the
+    factor for both the initial solve and the float64 iterative-
+    refinement step (two O(m^2) triangular solves against one O(m^3)
+    factorisation), reporting the refined residual norm relative to
+    ``rhs`` — the IPM body uses it to flag rows for the full-f64
+    fallback.
+    """
+    if newton_dtype == "float64":
+        return _newton_linsolve(linsolve, m_mat, rhs), jnp.zeros((),
+                                                                 m_mat.dtype)
+    from jax.scipy.linalg import solve_triangular
+    l32 = _chol_factor32(linsolve, m_mat.astype(jnp.float32))
+
+    def solve32(r):
+        y = solve_triangular(l32, r.astype(jnp.float32), lower=True)
+        x = solve_triangular(l32.T, y, lower=False)
+        return x.astype(m_mat.dtype)
+
+    dy = solve32(rhs)
+    r = rhs - m_mat @ dy
+    dy = dy + solve32(r)
+    r = rhs - m_mat @ dy
+    rel = jnp.linalg.norm(r) / (jnp.linalg.norm(rhs) + 1e-30)
+    return dy, rel
 
 
 class LPSolution(NamedTuple):
@@ -76,6 +172,21 @@ class _StdForm(NamedTuple):
     lb: jnp.ndarray         # original lower bounds (for un-shifting)
     row_scale: jnp.ndarray
     col_scale: jnp.ndarray
+
+
+class _IPMCarry(NamedTuple):
+    """Per-row iteration state of the stacked IPM — the chunked driver
+    round-trips this through host compaction between chunks."""
+    x: jnp.ndarray
+    y: jnp.ndarray
+    z: jnp.ndarray
+    w: jnp.ndarray
+    s: jnp.ndarray
+    it: jnp.ndarray         # total IPM iterations taken
+    it32: jnp.ndarray       # iterations taken on the f32 Newton path
+    done: jnp.ndarray       # converged (or started inactive)
+    bad: jnp.ndarray        # an f32 refined residual exceeded tolerance
+    grad: jnp.ndarray       # graduated to the full-f64 Newton path
 
 
 def _standardise(c, a_eq, b_eq, g, h, lb, ub) -> _StdForm:
@@ -122,35 +233,37 @@ def _step_len(v, dv, finite=None):
     return jnp.minimum(1.0, _ETA * ratios.min())
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "linsolve"))
-def _solve_std(a, b, c, u, tol=_TOL, active=True, *,
-               max_iters: int = _MAX_ITERS, linsolve: str = "xla"):
-    """``tol`` is a traced scalar (changing it does not recompile): B&B
-    node solves bound at ~1e-7 while reference solves keep 1e-9.
-
-    ``active`` (traced bool) is the per-row early-exit hook: an inactive
-    solve starts with its ``done`` flag already set, so under ``vmap`` it
-    contributes zero iterations to the batch (the while-loop trip count is
-    the max over ACTIVE rows) and reports ``iters == 0``.  ``linsolve``
-    (static) picks the Newton normal-equation backend, see
-    :data:`LINSOLVES`.
-    """
+def _ipm_ops(a, b, c, u, tol, linsolve):
+    """Closures for ONE (unbatched) IPM instance: cold-start ``init``,
+    per-iteration ``make_body(newton_dtype)`` and the residual ``report``
+    — shared verbatim by the monolithic ``_solve_std`` while-loop and the
+    chunked driver's per-chunk stepper, so both drivers run the exact
+    same row math."""
     m, n = a.shape
     dtype = a.dtype
     has_ub = u < _INF_UB * 0.5
-
-    # -- cold start, interior w.r.t. both bounds.  The floor must stay
-    # strictly inside (0, u) even for tiny upper bounds (scenario solves
-    # pin dead-platform variables with ub ~ 0), hence min(1e-2, u/4).
-    x0 = jnp.where(has_ub, 0.5 * jnp.minimum(u, 2.0), 1.0)
-    x0 = jnp.maximum(x0, jnp.where(has_ub, jnp.minimum(1e-2, 0.25 * u), 1e-2))
-    s0 = jnp.where(has_ub, u - x0, 1.0)
-    z0 = jnp.ones((n,), dtype)
-    w0 = jnp.where(has_ub, 1.0, 0.0)
-    y0 = jnp.zeros((m,), dtype)
-
     b_norm = 1.0 + jnp.linalg.norm(b)
     c_norm = 1.0 + jnp.linalg.norm(c)
+
+    def init(active) -> _IPMCarry:
+        # -- cold start, interior w.r.t. both bounds.  The floor must stay
+        # strictly inside (0, u) even for tiny upper bounds (scenario
+        # solves pin dead-platform variables with ub ~ 0), hence
+        # min(1e-2, u/4).
+        x0 = jnp.where(has_ub, 0.5 * jnp.minimum(u, 2.0), 1.0)
+        x0 = jnp.maximum(x0, jnp.where(has_ub, jnp.minimum(1e-2, 0.25 * u),
+                                       1e-2))
+        s0 = jnp.where(has_ub, u - x0, 1.0)
+        z0 = jnp.ones((n,), dtype)
+        w0 = jnp.where(has_ub, 1.0, 0.0).astype(dtype)
+        y0 = jnp.zeros((m,), dtype)
+        # strong dtypes throughout: the chunked driver round-trips the
+        # carry through numpy between chunks, and a weak->strong dtype
+        # flip would needlessly recompile the chunk stepper
+        false = jnp.array(False)
+        it0 = jnp.array(0, dtype=jnp.int32)
+        return _IPMCarry(x0, y0, z0, w0, s0, it0, it0,
+                         ~jnp.asarray(active, dtype=bool), false, false)
 
     def residuals(x, y, z, w, s):
         r_p = b - a @ x
@@ -162,79 +275,158 @@ def _solve_std(a, b, c, u, tol=_TOL, active=True, *,
         denom = n + has_ub.sum()
         return (x @ z + jnp.where(has_ub, s * w, 0.0).sum()) / denom
 
-    def newton(x, y, z, w, s, r_p, r_d, r_u, rc_xz, rc_sw):
-        # theta = z/x + w/s  (w/s only where bounded)
-        theta = z / x + jnp.where(has_ub, w / s, 0.0)
-        theta_inv = 1.0 / theta
-        # rhs of normal equations
-        rhat = (r_d - rc_xz / x
-                + jnp.where(has_ub, (rc_sw - w * r_u) / s, 0.0))
-        m_mat = (a * theta_inv[None, :]) @ a.T
-        m_mat = m_mat + 1e-11 * jnp.eye(m, dtype=dtype)
-        rhs = r_p + a @ (theta_inv * rhat)
-        dy = _newton_linsolve(linsolve, m_mat, rhs)
-        dx = theta_inv * (a.T @ dy - rhat)
-        dz = (rc_xz - z * dx) / x
-        ds = jnp.where(has_ub, r_u - dx, 0.0)
-        dw = jnp.where(has_ub, (rc_sw - w * ds) / s, 0.0)
-        return dx, dy, dz, dw, ds
+    def make_body(newton_dtype: str):
+        f32 = newton_dtype == "float32"
 
-    def body(carry):
-        x, y, z, w, s, it, _ = carry
-        r_p, r_d, r_u = residuals(x, y, z, w, s)
-        mu = mu_of(x, z, s, w)
-        # predictor (affine)
-        dx_a, dy_a, dz_a, dw_a, ds_a = newton(
-            x, y, z, w, s, r_p, r_d, r_u, -x * z,
-            jnp.where(has_ub, -s * w, 0.0))
-        ap = jnp.minimum(_step_len(x, dx_a), _step_len(s, ds_a, has_ub))
-        ad = jnp.minimum(_step_len(z, dz_a), _step_len(w, dw_a, has_ub))
-        mu_aff = ((x + ap * dx_a) @ (z + ad * dz_a)
-                  + (jnp.where(has_ub, (s + ap * ds_a) * (w + ad * dw_a), 0.0)).sum()
-                  ) / (n + has_ub.sum())
-        sigma = jnp.clip((mu_aff / jnp.maximum(mu, 1e-300)) ** 3, 0.0, 1.0)
-        # corrector
-        rc_xz = sigma * mu - x * z - dx_a * dz_a
-        rc_sw = jnp.where(has_ub, sigma * mu - s * w - ds_a * dw_a, 0.0)
-        dx, dy, dz, dw, ds = newton(x, y, z, w, s, r_p, r_d, r_u, rc_xz, rc_sw)
-        ap = jnp.minimum(_step_len(x, dx), _step_len(s, ds, has_ub))
-        ad = jnp.minimum(_step_len(z, dz), _step_len(w, dw, has_ub))
-        x = x + ap * dx
-        s = jnp.where(has_ub, s + ap * ds, s)
-        y = y + ad * dy
-        z = z + ad * dz
-        w = jnp.where(has_ub, w + ad * dw, w)
-        # convergence check
-        r_p2, r_d2, _ = residuals(x, y, z, w, s)
-        mu2 = mu_of(x, z, s, w)
-        done = ((jnp.linalg.norm(r_p2) / b_norm < tol)
-                & (jnp.linalg.norm(r_d2) / c_norm < tol)
-                & (mu2 < tol))
-        return (x, y, z, w, s, it + 1, done)
+        def newton(x, y, z, w, s, r_p, r_d, r_u, rc_xz, rc_sw):
+            # theta = z/x + w/s  (w/s only where bounded)
+            theta = z / x + jnp.where(has_ub, w / s, 0.0)
+            theta_inv = 1.0 / theta
+            # rhs of normal equations
+            rhat = (r_d - rc_xz / x
+                    + jnp.where(has_ub, (rc_sw - w * r_u) / s, 0.0))
+            m_mat = (a * theta_inv[None, :]) @ a.T
+            m_mat = m_mat + 1e-11 * jnp.eye(m, dtype=dtype)
+            rhs = r_p + a @ (theta_inv * rhat)
+            dy, rel = _newton_solve(linsolve, newton_dtype, m_mat, rhs)
+            dx = theta_inv * (a.T @ dy - rhat)
+            dz = (rc_xz - z * dx) / x
+            ds = jnp.where(has_ub, r_u - dx, 0.0)
+            dw = jnp.where(has_ub, (rc_sw - w * ds) / s, 0.0)
+            return dx, dy, dz, dw, ds, rel
 
-    def cond(carry):
-        *_, it, done = carry
-        return (~done) & (it < max_iters)
+        def body(carry: _IPMCarry) -> _IPMCarry:
+            x, y, z, w, s = carry.x, carry.y, carry.z, carry.w, carry.s
+            r_p, r_d, r_u = residuals(x, y, z, w, s)
+            mu = mu_of(x, z, s, w)
+            # predictor (affine)
+            dx_a, dy_a, dz_a, dw_a, ds_a, rel_a = newton(
+                x, y, z, w, s, r_p, r_d, r_u, -x * z,
+                jnp.where(has_ub, -s * w, 0.0))
+            ap = jnp.minimum(_step_len(x, dx_a), _step_len(s, ds_a, has_ub))
+            ad = jnp.minimum(_step_len(z, dz_a), _step_len(w, dw_a, has_ub))
+            mu_aff = ((x + ap * dx_a) @ (z + ad * dz_a)
+                      + (jnp.where(has_ub,
+                                   (s + ap * ds_a) * (w + ad * dw_a),
+                                   0.0)).sum()
+                      ) / (n + has_ub.sum())
+            sigma = jnp.clip((mu_aff / jnp.maximum(mu, 1e-300)) ** 3,
+                             0.0, 1.0)
+            # corrector
+            rc_xz = sigma * mu - x * z - dx_a * dz_a
+            rc_sw = jnp.where(has_ub, sigma * mu - s * w - ds_a * dw_a, 0.0)
+            dx, dy, dz, dw, ds, rel_c = newton(x, y, z, w, s, r_p, r_d, r_u,
+                                               rc_xz, rc_sw)
+            ap = jnp.minimum(_step_len(x, dx), _step_len(s, ds, has_ub))
+            ad = jnp.minimum(_step_len(z, dz), _step_len(w, dw, has_ub))
+            # a Cholesky factorisation of a too-ill-conditioned normal
+            # matrix (f32 anywhere; f64 on the pallas/ref backends near
+            # singularity) yields NaNs: REJECT the whole update — keep
+            # the intact iterate rather than poisoning the row.  On the
+            # f32 path the row additionally graduates, so the f64 phase
+            # recomputes this iteration from the pre-failure state.
+            ok = (jnp.isfinite(rel_a) & jnp.isfinite(rel_c)
+                  & jnp.isfinite(ap) & jnp.isfinite(ad)
+                  & jnp.all(jnp.isfinite(dx)) & jnp.all(jnp.isfinite(dy))
+                  & jnp.all(jnp.isfinite(dz)) & jnp.all(jnp.isfinite(dw))
+                  & jnp.all(jnp.isfinite(ds)))
+            ap = jnp.where(ok, ap, 0.0)
+            ad = jnp.where(ok, ad, 0.0)
+            dx = jnp.where(ok, dx, 0.0)
+            dy = jnp.where(ok, dy, 0.0)
+            dz = jnp.where(ok, dz, 0.0)
+            dw = jnp.where(ok, dw, 0.0)
+            ds = jnp.where(ok, ds, 0.0)
+            x = x + ap * dx
+            s = jnp.where(has_ub, s + ap * ds, s)
+            y = y + ad * dy
+            z = z + ad * dz
+            w = jnp.where(has_ub, w + ad * dw, w)
+            # convergence check
+            r_p2, r_d2, _ = residuals(x, y, z, w, s)
+            mu2 = mu_of(x, z, s, w)
+            done = ((jnp.linalg.norm(r_p2) / b_norm < tol)
+                    & (jnp.linalg.norm(r_d2) / c_norm < tol)
+                    & (mu2 < tol))
+            if f32:
+                bad = (carry.bad | (~ok) | (rel_a > _F32_REFINE_RTOL)
+                       | (rel_c > _F32_REFINE_RTOL))
+                # graduation is sticky: once a row needs the f64 path it
+                # never returns to f32 (mu is not monotone step-to-step)
+                grad = carry.grad | (mu2 <= _F32_SWITCH_MU) | bad
+                it32 = carry.it32 + 1
+            else:
+                bad, grad, it32 = carry.bad, carry.grad, carry.it32
+            return _IPMCarry(x, y, z, w, s, carry.it + 1, it32, done, bad,
+                             grad)
 
-    init = (x0, y0, z0, w0, s0, jnp.array(0),
-            ~jnp.asarray(active, dtype=bool))
-    x, y, z, w, s, it, _ = jax.lax.while_loop(cond, body, init)
-    r_p, r_d, _ = residuals(x, y, z, w, s)
-    mu = mu_of(x, z, s, w)
-    return x, y, it, jnp.linalg.norm(r_p) / b_norm, jnp.linalg.norm(r_d) / c_norm, mu
+        return body
+
+    def report(carry: _IPMCarry):
+        r_p, r_d, _ = residuals(carry.x, carry.y, carry.z, carry.w, carry.s)
+        mu = mu_of(carry.x, carry.z, carry.s, carry.w)
+        return (jnp.linalg.norm(r_p) / b_norm,
+                jnp.linalg.norm(r_d) / c_norm, mu)
+
+    return init, make_body, report
+
+
+def _run_ipm(carry: _IPMCarry, make_body, iter_cap, newton_dtype: str
+             ) -> _IPMCarry:
+    """Iterate one IPM instance to ``iter_cap`` total iterations (a traced
+    per-row cap under the chunked driver).  The mixed-precision path runs
+    two phases: f32 Newton until the row graduates (small mu or a bad
+    refined residual), then f64 Newton to convergence."""
+    if newton_dtype == "float32":
+        body32 = make_body("float32")
+
+        def cond32(cr: _IPMCarry):
+            return (~cr.done) & (~cr.grad) & (cr.it < iter_cap)
+
+        carry = jax.lax.while_loop(cond32, body32, carry)
+    body = make_body("float64")
+
+    def cond(cr: _IPMCarry):
+        return (~cr.done) & (cr.it < iter_cap)
+
+    return jax.lax.while_loop(cond, body, carry)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "linsolve",
+                                             "newton_dtype"))
+def _solve_std(a, b, c, u, tol=_TOL, active=True, *,
+               max_iters: int = _MAX_ITERS, linsolve: str = "xla",
+               newton_dtype: str = "float64"):
+    """``tol`` is a traced scalar (changing it does not recompile): B&B
+    node solves bound at ~1e-7 while reference solves keep 1e-9.
+
+    ``active`` (traced bool) is the per-row early-exit hook: an inactive
+    solve starts with its ``done`` flag already set, so under ``vmap`` it
+    contributes zero iterations to the batch (the while-loop trip count is
+    the max over ACTIVE rows) and reports ``iters == 0``.  ``linsolve``
+    (static) picks the Newton normal-equation backend (:data:`LINSOLVES`)
+    and ``newton_dtype`` (static) its precision (:data:`NEWTON_DTYPES`).
+    """
+    init, make_body, report = _ipm_ops(a, b, c, u, tol, linsolve)
+    carry = _run_ipm(init(active), make_body, max_iters, newton_dtype)
+    rp, rd, mu = report(carry)
+    return (carry.x, carry.y, carry.it, rp, rd, mu, carry.it32, carry.bad)
 
 
 def solve_lp(c, a_eq, b_eq, g, h, lb, ub, *, max_iters: int = _MAX_ITERS,
-             linsolve: str = "xla") -> LPSolution:
+             linsolve: str = "xla", newton_dtype: str = "float64"
+             ) -> LPSolution:
     """Solve the bounded LP.  All inputs numpy/JAX arrays; float64 advised."""
     dt = jnp.float64
+    newton_dtype = _canon_newton_dtype(newton_dtype)
     std = _standardise(jnp.asarray(c, dt), jnp.asarray(a_eq, dt),
                        jnp.asarray(b_eq, dt), jnp.asarray(g, dt),
                        jnp.asarray(h, dt), jnp.asarray(lb, dt),
                        jnp.asarray(ub, dt))
-    x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u,
-                                       max_iters=max_iters,
-                                       linsolve=linsolve)
+    x, y, it, rp, rd, gap, _, _ = _solve_std(std.a, std.b, std.c, std.u,
+                                             max_iters=max_iters,
+                                             linsolve=linsolve,
+                                             newton_dtype=newton_dtype)
     x_orig = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
     y_orig = y * std.row_scale
     obj = jnp.asarray(c, dt) @ x_orig
@@ -242,10 +434,12 @@ def solve_lp(c, a_eq, b_eq, g, h, lb, ub, *, max_iters: int = _MAX_ITERS,
 
 
 def solve_node_lp(node, *, max_iters: int = _MAX_ITERS,
-                  linsolve: str = "xla") -> LPSolution:
+                  linsolve: str = "xla", newton_dtype: str = "float64"
+                  ) -> LPSolution:
     """Convenience wrapper for :class:`repro.core.problem.NodeLP`."""
     return solve_lp(node.c, node.a_eq, node.b_eq, node.g, node.h,
-                    node.lb, node.ub, max_iters=max_iters, linsolve=linsolve)
+                    node.lb, node.ub, max_iters=max_iters, linsolve=linsolve,
+                    newton_dtype=newton_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -255,8 +449,9 @@ def solve_node_lp(node, *, max_iters: int = _MAX_ITERS,
 _BASE_NDIM = (1, 2, 1, 2, 1, 1, 1)          # c, a_eq, b_eq, g, h, lb, ub
 
 
-# jit(vmap(IPM)) per batching pattern, plus the set of distinct call
-# signatures (pattern + shapes) seen so far — the basis of
+# jit'd stacked-solver variants (monolithic vmapped IPMs, chunk preps,
+# chunk steppers, ...) keyed by configuration, plus the set of distinct
+# call signatures (pattern + shapes) seen so far — the basis of
 # :func:`stacked_compile_count`, which lets long-running consumers (the
 # spot-market simulator's replan loop) ASSERT that a fixed-width problem
 # representation really does reuse one compiled solver.
@@ -264,36 +459,44 @@ _STACKED_SOLVERS: dict = {}
 _STACKED_SIGNATURES: set = set()
 
 
-def _stacked_solver(axes, max_iters: int, linsolve: str):
+def _registered_jit(key, build):
+    fn = _STACKED_SOLVERS.get(key)
+    if fn is None:
+        fn = build()
+        _STACKED_SOLVERS[key] = fn
+    return fn
+
+
+def _stacked_solver(axes, max_iters: int, linsolve: str, newton_dtype: str):
     """jit(vmap(IPM)) for a given batching pattern; cached so the whole
     batched sweep compiles exactly once per (pattern, shape).  The per-row
     ``active`` mask always batches (axis 0): inactive rows retire at
     iteration zero, and under the Pallas backend each Newton step of the
     whole batch is ONE blocked batched-Cholesky kernel launch."""
-    key = (axes, max_iters, linsolve)
-    fn = _STACKED_SOLVERS.get(key)
-    if fn is not None:
-        return fn
+    def build():
+        def one(tol, active, c, a_eq, b_eq, g, h, lb, ub):
+            std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
+            x, y, it, rp, rd, gap, it32, bad = _solve_std(
+                std.a, std.b, std.c, std.u, tol, active,
+                max_iters=max_iters, linsolve=linsolve,
+                newton_dtype=newton_dtype)
+            xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
+            return (LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd,
+                               gap), it32, bad)
 
-    def one(tol, active, c, a_eq, b_eq, g, h, lb, ub):
-        std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
-        x, y, it, rp, rd, gap = _solve_std(std.a, std.b, std.c, std.u, tol,
-                                           active, max_iters=max_iters,
-                                           linsolve=linsolve)
-        xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
-        return LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd, gap)
+        return jax.jit(jax.vmap(one, in_axes=(None, 0) + axes))
 
-    fn = jax.jit(jax.vmap(one, in_axes=(None, 0) + axes))
-    _STACKED_SOLVERS[key] = fn
-    return fn
+    return _registered_jit((axes, max_iters, linsolve, newton_dtype), build)
 
 
 def stacked_compile_count() -> int:
     """Number of distinct compiled variants of the stacked IPM solver in
-    this process.  Uses the jit cache size when the runtime exposes it;
-    otherwise counts distinct call signatures (``jax.jit`` guarantees a
-    cache hit for an identical signature, so both measure recompiles).
-    A fixed-shape caller can assert this stays flat across calls."""
+    this process (monolithic vmapped solvers AND every chunked-driver
+    prep/init/chunk variant).  Uses the jit cache size when the runtime
+    exposes it; otherwise counts distinct call signatures (``jax.jit``
+    guarantees a cache hit for an identical signature, so both measure
+    recompiles).  A fixed-shape caller can assert this stays flat across
+    calls."""
     sizes = [getattr(fn, "_cache_size", None)
              for fn in _STACKED_SOLVERS.values()]
     if sizes and all(s is not None for s in sizes):
@@ -301,50 +504,325 @@ def stacked_compile_count() -> int:
     return len(_STACKED_SIGNATURES)
 
 
-# Newton-row accounting for the per-row early-exit path.  One "Newton
-# row" is one row of the stacked batch paying one IPM iteration.  The
-# lockstep baseline charges every row for every iteration of its call
-# (the SIMD batch iterates until its slowest active member converges);
-# the early-exit ledger charges each row only for the iterations it
-# actually ran (inactive padding rows retire at iteration zero, converged
-# rows freeze).  ``solver_bench`` reports the reduction.
+# Newton-row accounting for the per-row early-exit / chunked-compaction
+# paths.  One "Newton row" is one row of the stacked batch paying one IPM
+# iteration.  The lockstep baseline charges every row for every iteration
+# of its call (the SIMD batch iterates until its slowest active member
+# converges); the early-exit ledger charges each row only for the
+# iterations it actually ran, and ``compact_rows`` records what the
+# chunked driver really paid (buffer width x chunk trips, summed).
+# ``solver_bench`` reports the reductions.
 _NEWTON_STATS = {"calls": 0, "lockstep_rows": 0, "active_rows": 0,
-                 "hist": {}}
+                 "compact_rows": 0, "f32_rows": 0, "f64_rows": 0,
+                 "fallback_rows": 0, "nonconverged_rows": 0, "hist": {}}
 
 
 def reset_newton_row_stats() -> None:
-    _NEWTON_STATS.update(calls=0, lockstep_rows=0, active_rows=0, hist={})
+    _NEWTON_STATS.update(calls=0, lockstep_rows=0, active_rows=0,
+                         compact_rows=0, f32_rows=0, f64_rows=0,
+                         fallback_rows=0, nonconverged_rows=0, hist={})
 
 
 def newton_row_stats() -> dict:
     """Snapshot of the Newton-row ledger since the last reset:
-    ``calls``, ``lockstep_rows`` (what pure lockstep would pay),
-    ``active_rows`` (what per-row early exit pays), and ``hist`` — a
-    per-row IPM-iteration histogram (10-iteration buckets)."""
+
+    * ``calls`` — stacked solver calls recorded;
+    * ``lockstep_rows`` — what pure lockstep would pay (batch width times
+      the slowest active row, per call);
+    * ``active_rows`` — what per-row early exit pays (each row charged
+      only its own iterations);
+    * ``compact_rows`` — what the executing driver actually paid: equal
+      to ``lockstep_rows`` for monolithic calls, and the sum of (buffer
+      width x chunk trip count) for chunked/compacted calls;
+    * ``f32_rows`` / ``f64_rows`` — active row-iterations taken on the
+      float32 vs float64 Newton path;
+    * ``fallback_rows`` — rows whose refined f32 residual exceeded
+      tolerance and fell back to the full-f64 path;
+    * ``nonconverged_rows`` — active rows whose FINAL residuals missed
+      tolerance (residual-classified: a row that converged exactly at
+      ``max_iters`` does not count);
+    * ``hist`` — per-row IPM-iteration histogram (10-iteration buckets).
+
+    Use :func:`newton_ledger` to scope accumulation to one top-level
+    solve or benchmark run.
+    """
     out = dict(_NEWTON_STATS)
     out["hist"] = dict(_NEWTON_STATS["hist"])
     return out
 
 
-def _record_newton_rows(iters, active) -> None:
+@contextlib.contextmanager
+def newton_ledger():
+    """Scope the Newton-row ledger to a with-block.
+
+    Counters accumulate from zero inside the block; on exit the yielded
+    dict is filled with the scoped totals and the surrounding ledger is
+    restored with the scoped counts merged in (so an outer scope still
+    sees everything).  Back-to-back benchmark runs each get their own
+    ledger instead of mixing into the module-level counters::
+
+        with lp.newton_ledger() as led:
+            pareto.milp_tradeoff_batched(problem, ...)
+        print(led["active_rows"], led["lockstep_rows"])
+    """
+    outer = newton_row_stats()
+    reset_newton_row_stats()
+    scoped: dict = {}
+    try:
+        yield scoped
+    finally:
+        inner = newton_row_stats()
+        scoped.update(inner)
+        merged_hist = dict(outer["hist"])
+        for k, v in inner["hist"].items():
+            merged_hist[k] = merged_hist.get(k, 0) + v
+        for key in _NEWTON_STATS:
+            if key != "hist":
+                _NEWTON_STATS[key] = outer[key] + inner[key]
+        _NEWTON_STATS["hist"] = merged_hist
+
+
+def _record_newton_rows(iters, active, converged=None, it32=None, bad=None,
+                        compact_rows=None) -> None:
     iters = np.asarray(iters)
     active = np.asarray(active)
     act = iters[active]
     if act.size == 0:
         return
-    _NEWTON_STATS["calls"] += 1
-    _NEWTON_STATS["lockstep_rows"] += int(iters.shape[0] * act.max())
-    _NEWTON_STATS["active_rows"] += int(act.sum())
-    hist = _NEWTON_STATS["hist"]
+    st = _NEWTON_STATS
+    st["calls"] += 1
+    lockstep = int(iters.shape[0] * act.max())
+    st["lockstep_rows"] += lockstep
+    st["active_rows"] += int(act.sum())
+    st["compact_rows"] += (lockstep if compact_rows is None
+                           else int(compact_rows))
+    if it32 is not None:
+        f32 = int(np.asarray(it32)[active].sum())
+        st["f32_rows"] += f32
+        st["f64_rows"] += int(act.sum()) - f32
+    else:
+        st["f64_rows"] += int(act.sum())
+    if bad is not None:
+        st["fallback_rows"] += int(np.asarray(bad)[active].sum())
+    if converged is not None:
+        st["nonconverged_rows"] += int((~np.asarray(converged))[active].sum())
+    hist = st["hist"]
     for it in act:
         b = 10 * int(it // 10)
         hist[b] = hist.get(b, 0) + 1
 
 
+# ---------------------------------------------------------------------------
+# Chunked driver: mid-call batch compaction over a fixed width ladder
+# ---------------------------------------------------------------------------
+
+def _ladder_widths(batch: int) -> list:
+    """Fixed buffer-width ladder for mid-call compaction: the full batch
+    width plus every power of two below it.  One compiled chunk-stepper
+    variant per width, shared across chunks, calls and episodes — this is
+    what bounds :func:`stacked_compile_count` by the number of distinct
+    widths rather than the (data-dependent) number of compactions."""
+    widths = {batch}
+    w = 1
+    while w < batch:
+        widths.add(w)
+        w <<= 1
+    return sorted(widths, reverse=True)
+
+
+def _next_width(n_active: int, widths) -> int:
+    return min(w for w in widths if w >= n_active)
+
+
+def _chunk_prep(axes):
+    """jit(vmap(standardise)) for a batching pattern: broadcasts every
+    LP array to the full batch so the compaction gather is a plain row
+    permutation of the standard-form buffers."""
+    def build():
+        def prep(c, a_eq, b_eq, g, h, lb, ub):
+            std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
+            return (std.a, std.b, std.c, std.u, std.lb, std.row_scale,
+                    std.col_scale)
+
+        return jax.jit(jax.vmap(prep, in_axes=axes))
+
+    return _registered_jit(("chunk-prep", axes), build)
+
+
+def _chunk_init():
+    """Vmapped cold start over standard-form buffers."""
+    def build():
+        def init_one(a, b, c, u, active):
+            init, _, _ = _ipm_ops(a, b, c, u, jnp.asarray(_TOL, a.dtype),
+                                  "xla")
+            return init(active)
+
+        return jax.jit(jax.vmap(init_one))
+
+    return _registered_jit(("chunk-init",), build)
+
+
+def _chunk_stepper(chunk_iters: int, max_iters: int, linsolve: str,
+                   newton_dtype: str):
+    """Vmapped chunk step: advance every active row by up to
+    ``chunk_iters`` further IPM iterations (each row capped at its own
+    ``it + chunk_iters`` and globally at ``max_iters``) and report the
+    end-of-chunk residuals."""
+    def build():
+        def step_one(tol, a, b, c, u, carry):
+            _, make_body, report = _ipm_ops(a, b, c, u, tol, linsolve)
+            cap = jnp.minimum(carry.it + chunk_iters, max_iters)
+            out = _run_ipm(carry, make_body, cap, newton_dtype)
+            rp, rd, mu = report(out)
+            return out, rp, rd, mu
+
+        return jax.jit(jax.vmap(step_one, in_axes=(None, 0, 0, 0, 0, 0)))
+
+    return _registered_jit(("chunk-step", chunk_iters, max_iters, linsolve,
+                            newton_dtype), build)
+
+
+# (row shapes, chunk config, widths) ladders already pre-compiled
+_WARMED_LADDERS: set = set()
+
+
+def _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn, step_fn,
+                         tol_dev) -> None:
+    """Pre-compile every ladder width with an all-retired dummy buffer
+    (while-loop trip count zero, so each warm call costs one compile and
+    microseconds of run time).  After the FIRST chunked call for a given
+    shape/config, ``stacked_compile_count`` is already final: compaction
+    can never recompile mid-call or mid-episode."""
+    for w in widths:
+        aw = jnp.asarray(np.broadcast_to(a_h[:1], (w,) + a_h.shape[1:]))
+        bw = jnp.asarray(np.broadcast_to(b_h[:1], (w,) + b_h.shape[1:]))
+        cw = jnp.asarray(np.broadcast_to(c_h[:1], (w,) + c_h.shape[1:]))
+        uw = jnp.asarray(np.broadcast_to(u_h[:1], (w,) + u_h.shape[1:]))
+        carry = init_fn(aw, bw, cw, uw, jnp.zeros((w,), dtype=bool))
+        step_fn(tol_dev, aw, bw, cw, uw, carry)
+
+
+def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
+                           max_iters: int, chunk_iters: int, linsolve: str,
+                           newton_dtype: str):
+    """The chunked stacked driver (``compact=True``).
+
+    Newton steps run in chunks of ``chunk_iters``; between chunks the
+    still-active rows are gathered to the front of the smallest ladder
+    buffer that holds them (tail padded with retired rows) so the late
+    while-loop trips are paid only by the stragglers.  Row math is
+    identical to the monolithic driver (vmapped rows are independent and
+    chunk boundaries do not change the iteration), and the output is
+    scattered back to the ORIGINAL row order.
+
+    Returns ``(LPSolution, it32, bad, compact_rows)`` with batch-ordered
+    fields; ``compact_rows`` is the Newton-row cost actually paid
+    (sum over chunks of buffer width x trip count).
+    """
+    dt = jnp.float64
+    a, b, c, u, lb, rsc, csc = _chunk_prep(axes)(*arrs)
+    n_orig = arrs[0].shape[-1]
+    widths = _ladder_widths(batch)
+    init_fn = _chunk_init()
+    step_fn = _chunk_stepper(chunk_iters, max_iters, linsolve, newton_dtype)
+    tol_dev = jnp.asarray(tol, dt)
+
+    a_h, b_h, c_h, u_h = (np.asarray(v) for v in (a, b, c, u))
+    warm_key = (a_h.shape[1:], chunk_iters, max_iters, linsolve,
+                newton_dtype, tuple(widths))
+    if warm_key not in _WARMED_LADDERS:
+        _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn, step_fn,
+                             tol_dev)
+        _WARMED_LADDERS.add(warm_key)
+
+    carry = init_fn(a, b, c, u, jnp.asarray(active, dtype=bool))
+    cur = (a, b, c, u)
+    width = batch
+    orig = np.arange(batch)              # buffer slot -> original row
+    it_prev = np.zeros(batch, dtype=np.int64)
+    it32_prev = np.zeros(batch, dtype=np.int64)
+    out = {
+        "x": np.zeros((batch, a_h.shape[2])),
+        "y": np.zeros((batch, a_h.shape[1])),
+        "it": np.zeros(batch, dtype=np.int64),
+        "it32": np.zeros(batch, dtype=np.int64),
+        "bad": np.zeros(batch, dtype=bool),
+        "rp": np.zeros(batch), "rd": np.zeros(batch), "mu": np.zeros(batch),
+    }
+    compact_rows = 0
+    # every chunk advances every active row by >= 1 iteration, so
+    # max_iters chunks always suffice; +2 pads the all-retired first call
+    for _ in range(max_iters + 2):
+        carry, rp, rd, mu = step_fn(tol_dev, *cur, carry)
+        host = jax.device_get((carry, rp, rd, mu))   # one transfer per chunk
+        ch = dict(zip(_IPMCarry._fields, host[0]))
+        rp_h, rd_h, mu_h = host[1:]
+        valid = orig >= 0
+        vi = orig[valid]
+        out["x"][vi] = ch["x"][valid]
+        out["y"][vi] = ch["y"][valid]
+        out["it"][vi] = ch["it"][valid]
+        out["it32"][vi] = ch["it32"][valid]
+        out["bad"][vi] = ch["bad"][valid]
+        out["rp"][vi], out["rd"][vi] = rp_h[valid], rd_h[valid]
+        out["mu"][vi] = mu_h[valid]
+        # a mixed-precision chunk serialises an f32 phase and an f64
+        # phase: the lockstep trips actually executed are the max f32
+        # advance PLUS the max f64 advance over the buffer (a plain max
+        # of total advances would under-count when rows split phases)
+        d32 = ch["it32"] - it32_prev
+        d64 = (ch["it"] - ch["it32"]) - (it_prev - it32_prev)
+        trips = (int(max(d32.max(initial=0), 0))
+                 + int(max(d64.max(initial=0), 0)))
+        compact_rows += width * trips
+        alive = valid & ~ch["done"] & (ch["it"] < max_iters)
+        idx = np.flatnonzero(alive)
+        if idx.size == 0:
+            break
+        w_next = _next_width(int(idx.size), widths)
+        if w_next < width:
+            # compact: survivors to the front, tail padded with retired
+            # copies of the first survivor (done=True -> zero trips)
+            take = np.concatenate([idx, np.repeat(idx[:1],
+                                                  w_next - idx.size)])
+            fields = {f: np.array(ch[f][take])
+                      for f in _IPMCarry._fields}
+            fields["done"][idx.size:] = True
+            carry = _IPMCarry(**{f: jnp.asarray(v)
+                                 for f, v in fields.items()})
+            # the std-form buffers live in ORIGINAL row order: gather by
+            # the surviving rows' original indices, not buffer slots
+            src = orig[take]
+            cur = tuple(jnp.asarray(v[src])
+                        for v in (a_h, b_h, c_h, u_h))
+            orig = src
+            orig[idx.size:] = -1
+            width = w_next
+            it_prev = fields["it"][:]
+            it32_prev = fields["it32"][:]
+        else:
+            it_prev = ch["it"]
+            it32_prev = ch["it32"]
+
+    lb_h = np.broadcast_to(np.asarray(lb), (batch, n_orig))
+    csc_h = np.broadcast_to(np.asarray(csc), (batch,) + csc.shape[1:])
+    rsc_h = np.broadcast_to(np.asarray(rsc), (batch,) + rsc.shape[1:])
+    xo = out["x"][:, :n_orig] * csc_h[:, :n_orig] + lb_h
+    c0 = np.asarray(arrs[0], dtype=np.float64)
+    obj = xo @ c0 if c0.ndim == 1 else np.einsum("bn,bn->b", c0, xo)
+    sol = LPSolution(jnp.asarray(xo), jnp.asarray(obj),
+                     jnp.asarray(out["y"] * rsc_h), jnp.asarray(out["it"]),
+                     jnp.asarray(out["rp"]), jnp.asarray(out["rd"]),
+                     jnp.asarray(out["mu"]))
+    return sol, out["it32"], out["bad"], compact_rows
+
+
 def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
                      *, max_iters: int = _MAX_ITERS,
                      tol: float = _TOL, linsolve: str = "xla",
-                     row_active=None) -> LPSolution:
+                     row_active=None, compact: bool = False,
+                     chunk_iters=None, newton_dtype: str = "float64"
+                     ) -> LPSolution:
     """Solve a whole stack of LPs as ONE jitted, vmapped interior-point call.
 
     Any of the seven arrays may carry a leading batch dimension (detected
@@ -362,8 +840,32 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     the whole batch's Newton work; their solution rows are garbage and
     must be discarded by the caller.  The mask is a traced argument —
     changing it never recompiles.
+
+    ``compact=True`` switches to the CHUNKED driver: iterations run in
+    chunks of ``chunk_iters`` (default 8) and between chunks the batch is
+    compacted over a fixed power-of-two width ladder, so once most rows
+    have converged the remaining while-loop trips are paid only by the
+    stragglers — this converts the early-exit ledger's saved Newton rows
+    into wall-clock speedup on lockstep (CPU/SIMD) backends.  The row
+    MATH is identical to the monolithic driver and outputs keep the
+    input row order; numerically stable rows replay bit-identically,
+    while an ill-conditioned straggler that lands in a smaller ladder
+    buffer (a different compiled executable) may drift at the last-ulp
+    level and re-converge within ~1e-8 of the monolithic answer.  Every
+    ladder width is pre-compiled on first use, so
+    :func:`stacked_compile_count` stays flat afterwards.
+
+    ``newton_dtype="float32"`` enables the mixed-precision Newton path:
+    float32 factor/solve plus one float64 iterative-refinement step per
+    solve, with a per-row fallback to full float64 once the barrier
+    parameter is small or whenever the refined residual exceeds
+    tolerance.  Convergence checks always run in float64.
     """
     dt = jnp.float64
+    newton_dtype = _canon_newton_dtype(newton_dtype)
+    chunk_iters = _CHUNK_ITERS if chunk_iters is None else int(chunk_iters)
+    if chunk_iters < 1:
+        raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
     arrs = tuple(jnp.asarray(v, dt) for v in (c, a_eq, b_eq, g, h, lb, ub))
     axes = tuple(0 if a.ndim == base + 1 else None
                  for a, base in zip(arrs, _BASE_NDIM))
@@ -385,17 +887,32 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
         if active.shape != (batch,):
             raise ValueError(f"row_active shaped {active.shape}, "
                              f"expected ({batch},)")
-    _STACKED_SIGNATURES.add((axes, max_iters, linsolve,
+    if compact:
+        _STACKED_SIGNATURES.add(("compact", axes, max_iters, chunk_iters,
+                                 linsolve, newton_dtype,
+                                 tuple(a.shape for a in arrs)))
+        sol, it32, bad, compact_rows = _solve_stacked_compact(
+            arrs, axes, batch, tol, active, max_iters=max_iters,
+            chunk_iters=chunk_iters, linsolve=linsolve,
+            newton_dtype=newton_dtype)
+        _record_newton_rows(sol.iters, active, converged=sol.converged,
+                            it32=it32, bad=bad, compact_rows=compact_rows)
+        return sol
+    _STACKED_SIGNATURES.add((axes, max_iters, linsolve, newton_dtype,
                              tuple(a.shape for a in arrs)))
-    sol = _stacked_solver(axes, max_iters, linsolve)(
+    sol, it32, bad = _stacked_solver(axes, max_iters, linsolve,
+                                     newton_dtype)(
         jnp.asarray(tol, dt), active, *arrs)
-    _record_newton_rows(sol.iters, active)
+    _record_newton_rows(sol.iters, active, converged=sol.converged,
+                        it32=it32, bad=bad)
     return sol
 
 
 def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                            tol: float = _TOL, linsolve: str = "xla",
-                           row_active=None) -> LPSolution:
+                           row_active=None, compact: bool = False,
+                           chunk_iters=None, newton_dtype: str = "float64"
+                           ) -> LPSolution:
     """Stack a sequence of same-shape :class:`~repro.core.problem.NodeLP`
     relaxations (e.g. one per scenario x budget point) and solve them in a
     single batched IPM call."""
@@ -405,15 +922,21 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
     stacked = [np.stack([np.asarray(getattr(n, f)) for n in nodes])
                for f in ("c", "a_eq", "b_eq", "g", "h", "lb", "ub")]
     return solve_lp_stacked(*stacked, max_iters=max_iters, tol=tol,
-                            linsolve=linsolve, row_active=row_active)
+                            linsolve=linsolve, row_active=row_active,
+                            compact=compact, chunk_iters=chunk_iters,
+                            newton_dtype=newton_dtype)
 
 
 # Back-compat variant: same constraint structure, different rhs h (the
 # epsilon-constraint cost grid).  Thin wrapper over the stacked engine.
 def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
-                     *, max_iters: int = _MAX_ITERS, linsolve: str = "xla"):
+                     *, max_iters: int = _MAX_ITERS, linsolve: str = "xla",
+                     compact: bool = False, chunk_iters=None,
+                     newton_dtype: str = "float64"):
     return solve_lp_stacked(c, a_eq, b_eq, g, h_batch, lb, ub,
-                            max_iters=max_iters, linsolve=linsolve)
+                            max_iters=max_iters, linsolve=linsolve,
+                            compact=compact, chunk_iters=chunk_iters,
+                            newton_dtype=newton_dtype)
 
 
 def scipy_reference_lp(c, a_eq, b_eq, g, h, lb, ub):

@@ -58,10 +58,12 @@ class MILPResult:
 # Node LP solve (JAX IPM with HiGHS fallback)
 # ---------------------------------------------------------------------------
 
-def _solve_node(node, prefer_jax: bool = True, linsolve: str = "xla"):
+def _solve_node(node, prefer_jax: bool = True, linsolve: str = "xla",
+                newton_dtype: str = "float64"):
     """Returns (x, obj, status) with status in {ok, infeasible}."""
     if prefer_jax:
-        sol = lpmod.solve_node_lp(node, linsolve=linsolve)
+        sol = lpmod.solve_node_lp(node, linsolve=linsolve,
+                                  newton_dtype=newton_dtype)
         if bool(sol.converged):
             return np.asarray(sol.x), float(sol.obj), "ok"
     res = lpmod.scipy_reference_lp(node.c, node.a_eq, node.b_eq, node.g,
@@ -220,7 +222,8 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
               warm_alloc: Optional[np.ndarray] = None,
               lower_bound0: Optional[float] = None,
               pinned: Optional[np.ndarray] = None,
-              linsolve: str = "xla"
+              linsolve: str = "xla",
+              newton_dtype: str = "float64"
               ) -> MILPResult:
     """Structure-exploiting branch & bound.
 
@@ -234,7 +237,8 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
     setup binaries fixed to 0 at the ROOT (inherited by every node) —
     dead platforms / empty fleet slots, see
     :func:`repro.core.scenarios.dead_pin_mask`.  ``linsolve`` picks the
-    node LPs' Newton linear-system backend (:data:`repro.core.lp.LINSOLVES`).
+    node LPs' Newton linear-system backend (:data:`repro.core.lp.LINSOLVES`)
+    and ``newton_dtype`` its precision (:data:`repro.core.lp.NEWTON_DTYPES`).
     """
     t0 = time.monotonic()
     mu, tau = problem.mu, problem.tau
@@ -269,7 +273,7 @@ def solve_bnb(problem: AllocationProblem, cost_cap: Optional[float] = None,
         nodes += 1
         node = problem.node_lp(cost_cap, nd["b0"], nd["b1"],
                                nd["d_lb"], nd["d_ub"])
-        x, obj, st = _solve_node(node, prefer_jax, linsolve)
+        x, obj, st = _solve_node(node, prefer_jax, linsolve, newton_dtype)
         if st == "infeasible":
             continue
         if obj >= inc_mk * (1 - gap_tol):
@@ -309,7 +313,10 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
                     prefer_jax: bool = True,
                     pinned: Optional[np.ndarray] = None,
                     linsolve: str = "xla",
-                    early_exit: bool = True) -> list:
+                    early_exit: bool = True,
+                    compact: bool = False,
+                    chunk_iters: Optional[int] = None,
+                    newton_dtype: str = "float64") -> list:
     """Run one B&B tree per budget cap IN LOCKSTEP: each round pops the
     best open node from every active tree and solves all node relaxations
     as a single fixed-width batched interior-point call
@@ -352,6 +359,15 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
     ``tests/test_milp.py`` assert.  The mask is traced, so early exit
     never recompiles (``lp.stacked_compile_count`` stays flat as rows
     retire mid-sweep).
+
+    ``compact`` / ``chunk_iters`` switch every round's stacked solve to
+    the CHUNKED driver (mid-call batch compaction,
+    :func:`repro.core.lp.solve_lp_stacked`): converged rows stop paying
+    while-loop trips mid-call, which turns the early-exit ledger's saved
+    Newton rows into wall-clock speedup on lockstep (CPU) backends.
+    ``newton_dtype="float32"`` additionally runs the Newton solves on
+    the mixed-precision path (f32 + one f64 refinement step, per-row
+    f64 fallback).
     """
     t0 = time.monotonic()
     caps = [None if c is None else float(c) for c in caps]
@@ -464,7 +480,10 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
             active = np.arange(batch_width) < len(lps)
         sols = lpmod.solve_node_lps_stacked(batch, tol=lp_tol,
                                             linsolve=linsolve,
-                                            row_active=active)
+                                            row_active=active,
+                                            compact=compact,
+                                            chunk_iters=chunk_iters,
+                                            newton_dtype=newton_dtype)
         xs = np.asarray(sols.x)
         objs = np.asarray(sols.obj)
         conv = np.asarray(sols.converged)

@@ -118,7 +118,9 @@ def milp_tradeoff(problem: AllocationProblem, n_points: int = 8,
 
 def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
                         *, return_solutions: bool = False,
-                        linsolve: str = "xla"):
+                        linsolve: str = "xla", compact: bool = False,
+                        chunk_iters: Optional[int] = None,
+                        newton_dtype: str = "float64"):
     """Instant LOWER-BOUND frontier: the LP relaxation of Eq. 4 solved for
     every cost cap in ONE vmapped interior-point call (the epsilon grid
     shares the constraint matrix; only the budget rhs varies).
@@ -137,7 +139,9 @@ def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
     h_batch[:, -1] = caps
     sols = lpmod.solve_lp_stacked(node.c, node.a_eq, node.b_eq, node.g,
                                   h_batch, node.lb, node.ub,
-                                  linsolve=linsolve)
+                                  linsolve=linsolve, compact=compact,
+                                  chunk_iters=chunk_iters,
+                                  newton_dtype=newton_dtype)
     if return_solutions:
         return caps, np.asarray(sols.obj), sols
     return caps, np.asarray(sols.obj)
@@ -196,16 +200,20 @@ def milp_tradeoff_batched(problem: AllocationProblem, n_points: int = 8,
     root with zero nodes.  Results match :func:`milp_tradeoff` within
     solver tolerance.  A ``linsolve=`` kwarg routes every stacked Newton
     solve — relaxation grid and lockstep node batches alike — through the
-    chosen backend (:data:`repro.core.lp.LINSOLVES`).
+    chosen backend (:data:`repro.core.lp.LINSOLVES`); ``compact=`` /
+    ``chunk_iters=`` / ``newton_dtype=`` likewise steer every stacked
+    solve onto the chunked mid-call-compaction driver and/or the
+    mixed-precision Newton path (see :func:`repro.core.lp.solve_lp_stacked`).
     """
     if backend != "bnb":
-        kw.pop("linsolve", None)
-        kw.pop("early_exit", None)
+        for k in ("linsolve", "early_exit", "compact", "chunk_iters",
+                  "newton_dtype"):
+            kw.pop(k, None)
         return milp_tradeoff(problem, n_points, backend=backend, **kw)
     c_l, c_u, top = cost_bounds_batched(problem, **kw)
     caps = np.linspace(c_l, max(c_u, c_l), n_points)
     _, lbs, sols = relaxation_frontier(problem, caps, return_solutions=True,
-                                       linsolve=kw.get("linsolve", "xla"))
+                                       **_stacked_solve_kw(kw))
     xs = np.asarray(sols.x)
     relax_allocs = [problem.split_node_x(xs[k])[0] for k in range(len(caps))]
     points = _warm_sweep(problem, caps, lbs, relax_allocs, top, **kw)
@@ -229,7 +237,10 @@ def _as_scenario_set(scenarios):
 
 
 def _batched_scenario_relaxation(probs, caps_list, dead_masks,
-                                 linsolve: str = "xla"):
+                                 linsolve: str = "xla",
+                                 compact: bool = False,
+                                 chunk_iters: Optional[int] = None,
+                                 newton_dtype: str = "float64"):
     """One stacked IPM call across every (scenario, budget) pair.
 
     Returns (lbs (S, K), relax_allocs (S, K) list-of-lists).  Dead
@@ -246,7 +257,10 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks,
             h = np.array(base.h)
             h[-1] = float(ck)
             nodes.append(base._replace(h=h))
-    sols = lpmod.solve_node_lps_stacked(nodes, linsolve=linsolve)
+    sols = lpmod.solve_node_lps_stacked(nodes, linsolve=linsolve,
+                                        compact=compact,
+                                        chunk_iters=chunk_iters,
+                                        newton_dtype=newton_dtype)
     s, k = len(probs), len(caps_list[0])
     lbs = np.asarray(sols.obj).reshape(s, k)
     xs = np.asarray(sols.x).reshape(s, k, -1)
@@ -255,9 +269,21 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks,
     return lbs, allocs
 
 
+# sweep kwargs that also steer the batched relaxation solves: extracted
+# from a caller's **kw (which is otherwise forwarded to solve_bnb_sweep)
+def _stacked_solve_kw(kw: dict) -> dict:
+    return dict(linsolve=kw.get("linsolve", "xla"),
+                compact=kw.get("compact", False),
+                chunk_iters=kw.get("chunk_iters"),
+                newton_dtype=kw.get("newton_dtype", "float64"))
+
+
 def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
                                   n_points: int = 8,
-                                  linsolve: str = "xla"):
+                                  linsolve: str = "xla",
+                                  compact: bool = False,
+                                  chunk_iters: Optional[int] = None,
+                                  newton_dtype: str = "float64"):
     """LP-relaxation (lower-bound) frontier per scenario, ALL scenarios
     and budget points solved in a single batched interior-point call.
 
@@ -270,7 +296,9 @@ def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
     caps_list = [np.linspace(*_cheap_cost_bounds(p, s.dead), n_points)
                  for p, s in zip(probs, scen)]
     lbs, _ = _batched_scenario_relaxation(
-        probs, caps_list, [s.dead for s in scen], linsolve=linsolve)
+        probs, caps_list, [s.dead for s in scen], linsolve=linsolve,
+        compact=compact, chunk_iters=chunk_iters,
+        newton_dtype=newton_dtype)
     return {s.name: (caps_list[i], lbs[i]) for i, s in enumerate(scen)}
 
 
@@ -289,8 +317,7 @@ def scenario_frontiers(problem: AllocationProblem, scenarios,
     caps_list = [np.linspace(c_l, max(c_u, c_l), n_points)
                  for c_l, c_u, _ in bounds]
     lbs, relax_allocs = _batched_scenario_relaxation(
-        probs, caps_list, [s.dead for s in scen],
-        linsolve=kw.get("linsolve", "xla"))
+        probs, caps_list, [s.dead for s in scen], **_stacked_solve_kw(kw))
     out = {}
     for i, s in enumerate(scen):
         c_l, c_u, top = bounds[i]

@@ -183,11 +183,16 @@ def _padded_size(m: int, block: int) -> int:
 
 
 def chol_solve_one(a, b, *, block: int = DEFAULT_BLOCK,
-                   interpret: bool = True):
+                   interpret: bool = True, dtype=None):
     """Solve one SPD system ``a x = b`` (a: (m, m), b: (m,)) through the
     Pallas kernel.  ``jax.vmap`` of this call becomes one batched kernel
     launch — it is the function the IPM's vmapped Newton step closes
-    over."""
+    over.  The kernel runs in the dtype of ``a`` (float32 inputs stay
+    float32 — the mixed-precision Newton path feeds those); ``dtype``
+    casts both operands first."""
+    if dtype is not None:
+        a = a.astype(dtype)
+        b = b.astype(dtype)
     mp = _padded_size(a.shape[-1], block)
     ap, bp = _pad_spd(a, b, mp)
     x = _chol_solve_padded(ap, bp[:, None], nb=block, interpret=interpret)
@@ -195,21 +200,29 @@ def chol_solve_one(a, b, *, block: int = DEFAULT_BLOCK,
 
 
 def chol_solve(mats, rhs, *, block: int = DEFAULT_BLOCK,
-               interpret: bool = True):
+               interpret: bool = True, dtype=None):
     """Batched SPD solve: ``mats`` (B, m, m) or (m, m), ``rhs`` (B, m) or
-    (m,).  The batch runs as ONE Pallas launch (vmap adds the grid axis)."""
+    (m,).  The batch runs as ONE Pallas launch (vmap adds the grid axis).
+    ``dtype`` (optional) casts the inputs before the solve — the kernel
+    itself is dtype-generic and accepts float32 stacks directly."""
     mats = jnp.asarray(mats)
     rhs = jnp.asarray(rhs)
     if mats.ndim == 2:
-        return chol_solve_one(mats, rhs, block=block, interpret=interpret)
-    one = functools.partial(chol_solve_one, block=block, interpret=interpret)
+        return chol_solve_one(mats, rhs, block=block, interpret=interpret,
+                              dtype=dtype)
+    one = functools.partial(chol_solve_one, block=block, interpret=interpret,
+                            dtype=dtype)
     return jax.vmap(one)(mats, rhs)
 
 
-def chol_factor(mats, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+def chol_factor(mats, *, block: int = DEFAULT_BLOCK, interpret: bool = True,
+                dtype=None):
     """Batched blocked Cholesky factor L (lower; L @ L.T == mats), for
-    kernel-vs-oracle parity tests."""
+    kernel-vs-oracle parity tests.  ``dtype`` casts the input stack
+    first (float32 runs the whole factorisation in float32)."""
     mats = jnp.asarray(mats)
+    if dtype is not None:
+        mats = mats.astype(dtype)
     single = mats.ndim == 2
     if single:
         mats = mats[None]

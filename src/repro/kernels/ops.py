@@ -42,11 +42,16 @@ def mc_price(params: jnp.ndarray, *, kind_id: int, steps: int,
 
 
 def chol_solve(mats, rhs, *, use_pallas: bool = True,
-               block: int = _bc.DEFAULT_BLOCK):
+               block: int = _bc.DEFAULT_BLOCK, dtype=None):
     """Batched SPD solve (``mats`` (B, m, m) or (m, m)); Pallas blocked
     Cholesky kernel or the XLA factor+triangular-solve reference.  This is
     the ``linsolve="pallas"`` backend of the stacked IPM
-    (:func:`repro.core.lp.solve_lp_stacked`)."""
+    (:func:`repro.core.lp.solve_lp_stacked`).  ``dtype`` casts the
+    operands first — the IPM's mixed-precision Newton path
+    (``newton_dtype="float32"``) passes float32 stacks either way."""
+    if dtype is not None:
+        mats = jnp.asarray(mats).astype(dtype)
+        rhs = jnp.asarray(rhs).astype(dtype)
     if use_pallas:
         return _bc.chol_solve(mats, rhs, block=block,
                               interpret=not _on_tpu())

@@ -94,12 +94,18 @@ class StaticPolicy(Policy):
     time_limit_s: float = 30.0
     name: str = "static"
     linsolve: str = "xla"
+    compact: bool = False
+    chunk_iters: Optional[int] = None
+    newton_dtype: str = "float64"
 
     def __post_init__(self):
         self._planner = WarmMILPPolicy(n_caps=self.n_caps,
                                        node_limit=self.node_limit,
                                        time_limit_s=self.time_limit_s,
-                                       linsolve=self.linsolve)
+                                       linsolve=self.linsolve,
+                                       compact=self.compact,
+                                       chunk_iters=self.chunk_iters,
+                                       newton_dtype=self.newton_dtype)
 
     def reset(self, view: View) -> np.ndarray:
         self._alloc = self._planner.reset(view)
@@ -164,9 +170,21 @@ class WarmMILPPolicy(Policy):
     # issues (relaxation grid + lockstep node batches); see
     # :data:`repro.core.lp.LINSOLVES`.
     linsolve: str = "xla"
+    # chunked-driver / mixed-precision knobs, threaded into every stacked
+    # solve (see :func:`repro.core.lp.solve_lp_stacked`): compact=True
+    # retires converged rows mid-call over the fixed width ladder;
+    # newton_dtype="float32" runs the f32+refinement Newton path.
+    compact: bool = False
+    chunk_iters: Optional[int] = None
+    newton_dtype: str = "float64"
 
     def __post_init__(self):
         self._alloc: Optional[np.ndarray] = None
+
+    def _solver_kw(self) -> dict:
+        return dict(linsolve=self.linsolve, compact=self.compact,
+                    chunk_iters=self.chunk_iters,
+                    newton_dtype=self.newton_dtype)
 
     def _plan(self, view: View) -> np.ndarray:
         p, dead, pin = view.problem, view.dead, view.pin
@@ -174,7 +192,7 @@ class WarmMILPPolicy(Policy):
         caps = np.linspace(c_l, max(c_u, c_l) * self.cap_headroom,
                            self.n_caps)
         lbs, relax_allocs = pareto._batched_scenario_relaxation(
-            [p], [caps], [dead], linsolve=self.linsolve)
+            [p], [caps], [dead], **self._solver_kw())
         prev = None
         if self._alloc is not None:
             prev = _mask_to_alive(p, self._alloc, dead)
@@ -186,7 +204,7 @@ class WarmMILPPolicy(Policy):
             lower_bounds0=[float(v) for v in lbs[0]],
             pinned=pin, batch_width=self.n_caps,
             node_limit=self.node_limit, time_limit_s=self.time_limit_s,
-            lp_tol=self.lp_tol, linsolve=self.linsolve)
+            lp_tol=self.lp_tol, **self._solver_kw())
         # the masked previous plan stays in the running: continuity when
         # it is still the cheapest SLO-feasible choice (no churn), and
         # the budget grid can never force a strictly worse plan
@@ -248,6 +266,9 @@ class FrontierLookupPolicy(Policy):
     time_limit_s: float = 30.0
     name: str = "frontier_lookup"
     linsolve: str = "xla"
+    compact: bool = False
+    chunk_iters: Optional[int] = None
+    newton_dtype: str = "float64"
 
     def _anticipated_problem(self, view: View) -> AllocationProblem:
         p = view.problem
@@ -294,7 +315,9 @@ class FrontierLookupPolicy(Policy):
         self._frontiers = pareto.scenario_frontiers(
             self._anticipated_problem(view), self._battery_set,
             n_points=self.n_points, node_limit=self.node_limit,
-            time_limit_s=self.time_limit_s, linsolve=self.linsolve)
+            time_limit_s=self.time_limit_s, linsolve=self.linsolve,
+            compact=self.compact, chunk_iters=self.chunk_iters,
+            newton_dtype=self.newton_dtype)
         return self.replan(view, None)
 
     def replan(self, view: View, event) -> np.ndarray:

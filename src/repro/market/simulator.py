@@ -178,7 +178,8 @@ class Fleet:
 def slo_for_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
                     episode: ev.MarketEpisode, *,
                     penalty_factor: float = 2.0,
-                    linsolve: str = "xla"
+                    linsolve: str = "xla",
+                    newton_dtype: str = "float64"
                     ) -> Tuple[float, float]:
     """(slo_latency, sla_penalty_rate) anchors for an episode.
 
@@ -197,7 +198,7 @@ def slo_for_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
         p, heuristics.proportional_split(p, w))
     sol = lpmod.solve_node_lp(p.node_lp(
         None, b_fixed0=dead_pin_mask(fleet.dead, p.tau)),
-        linsolve=linsolve)
+        linsolve=linsolve, newton_dtype=newton_dtype)
     lb = float(sol.obj) if bool(sol.converged) else mk_split * 0.5
     slo = float(np.sqrt(max(lb, 1e-9) * mk_split))
     return slo, penalty_factor * cost_split / mk_split
@@ -246,7 +247,10 @@ def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
                 episode: ev.MarketEpisode, policy, *,
                 slo_latency: float,
                 task_names=None,
-                linsolve: Optional[str] = None) -> EpisodeResult:
+                linsolve: Optional[str] = None,
+                compact: Optional[bool] = None,
+                chunk_iters: Optional[int] = None,
+                newton_dtype: Optional[str] = None) -> EpisodeResult:
     """Replay an episode against a policy.
 
     The loop alternates: close the current inter-event interval under
@@ -255,16 +259,24 @@ def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
     no-op); the standing allocation is always evaluated against the TRUE
     current fleet, so un-replanned stranded work costs what it should.
 
-    ``linsolve`` (optional) pushes a Newton linear-system backend
-    (:data:`repro.core.lp.LINSOLVES`) onto the policy before the episode
-    starts — the one-line way to replay a whole episode through the
-    Pallas batched-Cholesky path.  Policies without solver backends
-    (e.g. the heuristic re-split) ignore it.
+    ``linsolve`` / ``compact`` / ``chunk_iters`` / ``newton_dtype``
+    (optional) push the matching solver knob onto the policy before the
+    episode starts — the one-line way to replay a whole episode through
+    the Pallas batched-Cholesky path, the chunked mid-call-compaction
+    driver or the mixed-precision Newton path (see
+    :func:`repro.core.lp.solve_lp_stacked`).  Policies without solver
+    backends (e.g. the heuristic re-split) ignore them.
     """
-    if linsolve is not None and hasattr(policy, "linsolve"):
-        policy.linsolve = linsolve
+    pushed = False
+    for knob, val in (("linsolve", linsolve), ("compact", compact),
+                      ("chunk_iters", chunk_iters),
+                      ("newton_dtype", newton_dtype)):
+        if val is not None and hasattr(policy, knob):
+            setattr(policy, knob, val)
+            pushed = True
+    if pushed:
         post = getattr(policy, "__post_init__", None)
-        if post is not None:       # re-seed helpers built from linsolve
+        if post is not None:       # re-seed helpers built from the knobs
             post()
     fleet = Fleet.from_episode(catalog, n, episode, task_names)
     view = fleet.view(0.0, slo_latency)

@@ -1,0 +1,263 @@
+"""Chunked stacked-IPM driver: mid-call batch compaction over the fixed
+width ladder, plus the mixed-precision (float32 + refinement) Newton
+path.  Acceptance bars: active rows agree with the monolithic driver to
+<= 1e-8 across every ``linsolve`` backend, retired-row ordering is
+restored on output, and ``stacked_compile_count`` is bounded by the
+width ladder and stays flat across repeat calls / a whole market
+episode."""
+import numpy as np
+import pytest
+
+from repro.core import lp
+
+
+def _random_lp(seed, n=16, meq=4, mineq=6, ub_frac=0.5, hard=False):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(meq, n))
+    x0 = rng.uniform(0.1, 0.9, size=n)
+    b = a @ x0
+    g = rng.normal(size=(mineq, n))
+    h = g @ x0 + rng.uniform(0.05, 1.0, size=mineq)
+    c = rng.normal(size=n)
+    if hard:
+        # near-degenerate rows: tiny inequality slacks + a wide cost
+        # spread make the IPM iterate far past the easy rows (the
+        # skewed-straggler shape the chunked driver exists for)
+        h = g @ x0 + rng.uniform(1e-7, 1e-5, size=mineq)
+        c = c * np.logspace(-3, 3, n)[rng.permutation(n)]
+    lb = np.zeros(n)
+    ub = np.full(n, np.inf)
+    ub[rng.random(n) < ub_frac] = rng.uniform(1.0, 3.0)
+    return c, a, b, g, h, lb, ub
+
+
+def _skewed_stack(n_easy=6, n_hard=1, seed0=0):
+    probs = [_random_lp(seed0 + s) for s in range(n_easy)]
+    probs += [_random_lp(9000 + seed0 + s, hard=True) for s in range(n_hard)]
+    return [np.stack(arrs) for arrs in zip(*probs)], len(probs)
+
+
+# ---------------------------------------------------------------------------
+# Compaction parity
+# ---------------------------------------------------------------------------
+
+def test_compact_matches_monolithic_all_backends():
+    """Active rows of a compacted solve agree with the monolithic driver
+    to <= 1e-8 under every linsolve backend.  Well-conditioned rows are
+    exactly bit-identical; the crafted ill-conditioned straggler may
+    take a (last-ulp-perturbed) different trajectory once it lands in a
+    smaller ladder buffer — a different compiled executable — but must
+    still converge to the same answer within tolerance."""
+    stacked, batch = _skewed_stack()
+    for backend in lp.LINSOLVES:
+        mono = lp.solve_lp_stacked(*stacked, linsolve=backend)
+        comp = lp.solve_lp_stacked(*stacked, linsolve=backend, compact=True)
+        # rows that converge quickly are numerically stable: their
+        # trajectories replay bit-identically through the ladder
+        easy = np.flatnonzero(np.asarray(mono.iters) <= 15)
+        assert easy.size >= batch - 2
+        obj_m, obj_c = np.asarray(mono.obj), np.asarray(comp.obj)
+        assert (np.abs(obj_c - obj_m) <= 1e-8 * (1 + np.abs(obj_m))).all(), \
+            backend
+        assert np.abs(np.asarray(comp.x) - np.asarray(mono.x)).max() \
+            < 1e-7, backend
+        assert np.asarray(comp.converged).tolist() == \
+            np.asarray(mono.converged).tolist()
+        np.testing.assert_array_equal(np.asarray(comp.iters)[easy],
+                                      np.asarray(mono.iters)[easy])
+        np.testing.assert_array_equal(np.asarray(comp.x)[easy],
+                                      np.asarray(mono.x)[easy])
+
+
+@pytest.mark.parametrize("chunk_iters", [3, 8, 16])
+def test_compact_chunk_length_invariance(chunk_iters):
+    """Any chunk length reproduces the monolithic answer: chunk
+    boundaries do not change the row math, and well-conditioned rows
+    replay the exact monolithic trajectory."""
+    stacked, _ = _skewed_stack(seed0=40)
+    mono = lp.solve_lp_stacked(*stacked)
+    easy = np.flatnonzero(np.asarray(mono.iters) <= 15)
+    comp = lp.solve_lp_stacked(*stacked, compact=True,
+                               chunk_iters=chunk_iters)
+    obj_m, obj_c = np.asarray(mono.obj), np.asarray(comp.obj)
+    assert (np.abs(obj_c - obj_m) <= 1e-8 * (1 + np.abs(obj_m))).all()
+    assert np.asarray(comp.converged).all()
+    np.testing.assert_array_equal(np.asarray(comp.iters)[easy],
+                                  np.asarray(mono.iters)[easy])
+
+
+def test_compact_rejects_bad_chunk_iters():
+    stacked, _ = _skewed_stack(seed0=50)
+    with pytest.raises(ValueError):
+        lp.solve_lp_stacked(*stacked, compact=True, chunk_iters=0)
+
+
+def test_compact_restores_retired_row_ordering():
+    """row_active holes + mid-call compaction: outputs come back in the
+    ORIGINAL row order, with retired rows at iters == 0; stable active
+    rows are identical to the all-active compacted solve and straggler
+    rows agree to tolerance (the two solves compact on different
+    schedules, so a straggler may run in a different-width executable)."""
+    stacked, batch = _skewed_stack(n_easy=7, n_hard=2, seed0=60)
+    mask = np.ones(batch, dtype=bool)
+    mask[[1, 4]] = False
+    full = lp.solve_lp_stacked(*stacked, compact=True)
+    part = lp.solve_lp_stacked(*stacked, compact=True, row_active=mask)
+    iters = np.asarray(part.iters)
+    assert (iters[~mask] == 0).all()
+    stable = np.asarray(full.iters) <= 15
+    for i in np.flatnonzero(mask & stable):
+        assert float(part.obj[i]) == float(full.obj[i])
+        np.testing.assert_array_equal(np.asarray(part.x[i]),
+                                      np.asarray(full.x[i]))
+    for i in np.flatnonzero(mask & ~stable):
+        assert abs(float(part.obj[i]) - float(full.obj[i])) \
+            <= 1e-8 * (1 + abs(float(full.obj[i])))
+
+
+def test_compact_compile_count_bounded_and_flat():
+    """The chunked driver compiles at most one prep + one init and one
+    stepper variant PER LADDER WIDTH (all pre-warmed on first use), and
+    repeat calls — including different row_active masks, which change
+    which widths the compaction visits — never recompile."""
+    stacked, batch = _skewed_stack(n_easy=12, n_hard=2, seed0=70)
+    widths = lp._ladder_widths(batch)
+    count0 = lp.stacked_compile_count()
+    lp.solve_lp_stacked(*stacked, compact=True)
+    count1 = lp.stacked_compile_count()
+    # <= #widths steppers + #widths inits + 1 prep (the bound the bench
+    # asserts: compile count scales with DISTINCT WIDTHS, not chunks)
+    assert count1 - count0 <= 2 * len(widths) + 1
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        mask = rng.random(batch) < 0.7
+        mask[0] = True
+        lp.solve_lp_stacked(*stacked, compact=True, row_active=mask)
+    lp.solve_lp_stacked(*stacked, compact=True, chunk_iters=8)
+    assert lp.stacked_compile_count() == count1
+
+
+def test_compact_ledger_counts_real_savings():
+    """compact_rows (what the chunked driver pays) sits between the
+    ideal per-row cost (active_rows) and the lockstep cost."""
+    stacked, _ = _skewed_stack(n_easy=12, n_hard=2, seed0=80)
+    with lp.newton_ledger() as led:
+        lp.solve_lp_stacked(*stacked, compact=True)
+    assert led["calls"] == 1
+    assert led["active_rows"] <= led["compact_rows"] <= led["lockstep_rows"]
+    assert led["compact_rows"] < led["lockstep_rows"]
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision Newton path
+# ---------------------------------------------------------------------------
+
+def test_newton_dtype_f32_converges_close_to_f64():
+    stacked, batch = _skewed_stack(n_easy=8, n_hard=1, seed0=90)
+    base = lp.solve_lp_stacked(*stacked)
+    for compact in (False, True):
+        sol = lp.solve_lp_stacked(*stacked, newton_dtype="float32",
+                                  compact=compact)
+        assert np.asarray(sol.converged).all()
+        rel = np.abs(np.asarray(sol.obj) - np.asarray(base.obj)) \
+            / (1.0 + np.abs(np.asarray(base.obj)))
+        assert rel.max() < 1e-6
+
+
+def test_newton_dtype_f32_ledger_split():
+    """The ledger splits row-iterations between the f32 and f64 paths:
+    early barrier iterations run in f32, the polish (and any refined-
+    residual fallback) in f64."""
+    stacked, _ = _skewed_stack(n_easy=8, n_hard=1, seed0=100)
+    with lp.newton_ledger() as led:
+        lp.solve_lp_stacked(*stacked, newton_dtype="float32")
+    assert led["f32_rows"] > 0
+    assert led["f64_rows"] > 0
+    assert led["f32_rows"] + led["f64_rows"] == led["active_rows"]
+    with lp.newton_ledger() as led64:
+        lp.solve_lp_stacked(*stacked)
+    assert led64["f32_rows"] == 0
+    assert led64["f64_rows"] == led64["active_rows"]
+
+
+def test_newton_dtype_aliases_and_rejects():
+    stacked, _ = _skewed_stack(n_easy=3, n_hard=0, seed0=110)
+    import jax.numpy as jnp
+    a = lp.solve_lp_stacked(*stacked, newton_dtype="f32")
+    b = lp.solve_lp_stacked(*stacked, newton_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(a.obj), np.asarray(b.obj))
+    with pytest.raises(ValueError):
+        lp.solve_lp_stacked(*stacked, newton_dtype="int8")
+    with pytest.raises(ValueError):
+        lp.solve_lp(*[arr[0] for arr in stacked], newton_dtype="bf16")
+
+
+def test_single_lp_newton_dtype_f32():
+    prob = _random_lp(7)
+    ref = lp.scipy_reference_lp(*prob)
+    sol = lp.solve_lp(*prob, newton_dtype="float32")
+    assert bool(sol.converged)
+    assert abs(float(sol.obj) - ref.fun) < 1e-5 * (1 + abs(ref.fun))
+
+
+# ---------------------------------------------------------------------------
+# Ledger scoping
+# ---------------------------------------------------------------------------
+
+def test_newton_ledger_scopes_and_merges():
+    lp.reset_newton_row_stats()
+    stacked, _ = _skewed_stack(n_easy=3, n_hard=0, seed0=120)
+    lp.solve_lp_stacked(*stacked)
+    outer_before = lp.newton_row_stats()
+    with lp.newton_ledger() as led:
+        lp.solve_lp_stacked(*stacked)
+        lp.solve_lp_stacked(*stacked)
+    assert led["calls"] == 2                      # scoped counts only
+    after = lp.newton_row_stats()
+    assert after["calls"] == outer_before["calls"] + 2   # merged upward
+    assert after["active_rows"] == \
+        outer_before["active_rows"] + led["active_rows"]
+    assert sum(after["hist"].values()) == \
+        sum(outer_before["hist"].values()) + sum(led["hist"].values())
+    lp.reset_newton_row_stats()
+
+
+# ---------------------------------------------------------------------------
+# Episode-level: one warmed ladder serves a whole market episode
+# ---------------------------------------------------------------------------
+
+def test_episode_compile_count_flat_with_compaction():
+    """run_episode(..., compact=True) pushes the chunked driver onto the
+    policy; after the first (reset) replan has warmed the width ladder,
+    no later replan may recompile — the fixed-width slot fleet plus the
+    pre-warmed ladder keep stacked_compile_count flat."""
+    from repro.market import events, metrics, simulator
+    from repro.market.policies import WarmMILPPolicy
+    from tests.test_milp import random_problem
+    base = random_problem(3, 4, 5)
+    catalog = simulator.catalog_from_problem(base)
+    ep = events.generate_episode([k.name for k in catalog], seed=7,
+                                 horizon_s=3600.0, n_initial=3,
+                                 max_platforms=6)
+    fleet = simulator.Fleet.from_episode(catalog, base.n, ep)
+    lat = fleet.problem().single_platform_latency()
+    slo = float(lat[~fleet.dead].min()) * 0.8
+    kw = dict(node_limit=40, time_limit_s=10.0)
+    pol = WarmMILPPolicy(**kw)
+    r1 = simulator.run_episode(catalog, base.n, ep, pol, slo_latency=slo,
+                               compact=True)
+    assert pol.compact is True
+    assert r1.no_recompile
+    # deterministic: a second compacted episode replays identically and
+    # stays on the (already warm) compiled ladder
+    count = lp.stacked_compile_count()
+    r2 = simulator.run_episode(catalog, base.n, ep, WarmMILPPolicy(**kw),
+                               slo_latency=slo, compact=True)
+    assert lp.stacked_compile_count() == count
+    m1, m2 = metrics.summarise(r1), metrics.summarise(r2)
+    assert m1.accrued_cost == m2.accrued_cost
+    # and the compacted episode lands on the same cost scale as the
+    # monolithic driver (identical row math; B&B tie-breaks may differ)
+    mx = metrics.summarise(simulator.run_episode(
+        catalog, base.n, ep, WarmMILPPolicy(**kw), slo_latency=slo))
+    np.testing.assert_allclose(m1.accrued_cost, mx.accrued_cost, rtol=0.05)

@@ -250,6 +250,33 @@ def test_sweep_early_exit_matches_serial_and_saves_rows():
         assert rb.cost <= ck * (1 + 1e-6)
 
 
+def test_sweep_compact_matches_monolithic():
+    """``compact=True`` routes every lockstep round's stacked solve
+    through the chunked mid-call-compaction driver: per-budget frontier
+    results match the monolithic sweep to solver tolerance, repeat
+    compacted sweeps are deterministic, and nothing recompiles once the
+    width ladder is warm."""
+    from repro.core import lp
+    p = random_problem(43)
+    c_l = float(p.single_platform_cost().min())
+    caps = np.linspace(c_l, c_l * 3, 3)
+    kw = dict(node_limit=100, time_limit_s=30)
+    plain = milp.solve_bnb_sweep(p, caps, **kw)
+    comp = milp.solve_bnb_sweep(p, caps, compact=True, **kw)
+    count = lp.stacked_compile_count()
+    for a, b in zip(plain, comp):
+        if a.alloc is None:
+            assert b.alloc is None
+            continue
+        assert abs(a.makespan - b.makespan) <= 1e-6 * a.makespan + 1e-9
+        assert abs(a.cost - b.cost) <= 1e-6 * a.cost + 1e-9
+    comp2 = milp.solve_bnb_sweep(p, caps, compact=True, **kw)
+    assert lp.stacked_compile_count() == count
+    for b, b2 in zip(comp, comp2):
+        assert b.makespan == b2.makespan
+        assert b.nodes == b2.nodes
+
+
 def test_sweep_linsolve_backends_agree():
     """The whole lockstep sweep through the Pallas batched-Cholesky
     backend lands on the same frontier as the xla backend."""

@@ -1,0 +1,104 @@
+"""Diff a fresh benchmark run against the committed baseline.
+
+The repo commits its perf trajectory as ``BENCH_solver.json`` (written
+by ``python -m benchmarks.run --json-out``); CI re-runs the smoke suite
+and gates on this comparison, so speedups claimed in past PRs are
+enforced rather than anecdotal.  The gate is deliberately GENEROUS
+(default 4x): shared CI runners are noisy and the committed baseline
+may come from different hardware — this catches order-of-magnitude
+regressions and accidental de-jit-ing, not 10% drifts.
+
+Rows are matched by exact name.  Rows present only on one side are
+reported but never fail the gate (benchmarks come and go across PRs);
+rows below ``--min-us`` on both sides are skipped (they time nothing).
+
+    python -m benchmarks.compare --baseline BENCH_solver.json \\
+        --fresh BENCH_fresh.json [--threshold 4.0] [--min-us 1000]
+
+Exit status: 0 when every matched row is within threshold, 1 otherwise.
+Update workflow: see docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    """name -> us_per_call for every timed row of a bench JSON."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {}
+    for row in payload.get("rows", []):
+        us = row.get("us_per_call")
+        if us is not None:
+            rows[row["name"]] = float(us)
+    return rows
+
+
+def compare(baseline: dict, fresh: dict, *, threshold: float,
+            min_us: float) -> tuple:
+    """Returns (report_lines, regressions) — regressions is the list of
+    (name, base_us, fresh_us, ratio) rows exceeding the threshold."""
+    lines, regressions = [], []
+    common = sorted(set(baseline) & set(fresh))
+    for name in common:
+        b, f = baseline[name], fresh[name]
+        if b < min_us and f < min_us:
+            continue
+        ratio = f / max(b, 1e-9)
+        flag = ""
+        if ratio > threshold:
+            flag = f"  << REGRESSION (> {threshold:.1f}x)"
+            regressions.append((name, b, f, ratio))
+        elif ratio < 1.0 / threshold:
+            flag = "  (much faster — consider refreshing the baseline)"
+        lines.append(f"{name}: {b:.0f}us -> {f:.0f}us "
+                     f"({ratio:.2f}x){flag}")
+    for name in sorted(set(baseline) - set(fresh)):
+        lines.append(f"{name}: only in baseline (row removed?)")
+    for name in sorted(set(fresh) - set(baseline)):
+        lines.append(f"{name}: new row (not gated)")
+    if not common:
+        lines.append("no rows in common — nothing gated")
+    return lines, regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", default="BENCH_solver.json",
+                    help="committed baseline JSON (default: "
+                         "BENCH_solver.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced JSON from benchmarks.run "
+                         "--json-out")
+    ap.add_argument("--threshold", type=float, default=4.0,
+                    help="fail when fresh > threshold * baseline "
+                         "(default 4.0 — generous, for noisy runners)")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="skip rows faster than this on both sides "
+                         "(default 1000us)")
+    args = ap.parse_args()
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    lines, regressions = compare(base, fresh, threshold=args.threshold,
+                                 min_us=args.min_us)
+    print(f"bench-compare: baseline={args.baseline} fresh={args.fresh} "
+          f"threshold={args.threshold}x min_us={args.min_us}")
+    for line in lines:
+        print(line)
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed past "
+              f"{args.threshold}x:", file=sys.stderr)
+        for name, b, f, ratio in regressions:
+            print(f"  {name}: {b:.0f}us -> {f:.0f}us ({ratio:.2f}x)",
+                  file=sys.stderr)
+        sys.exit(1)
+    print("bench-compare: OK")
+
+
+if __name__ == "__main__":
+    main()

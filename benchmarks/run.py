@@ -38,10 +38,11 @@ def main() -> None:
     if args.seed is not None:
         os.environ["REPRO_BENCH_SEED"] = str(args.seed)
 
-    # The spot-market policy benchmark is NOT in this list: it is its own
-    # CLI (``python -m benchmarks.market_bench``) with the same
-    # --smoke/--seed/--out flags, run as a separate CI step so its CSV
-    # lands in its own artifact instead of double-running here.
+    # The spot-market policy benchmark and the serving benchmark are NOT
+    # in this list: each is its own CLI (``python -m
+    # benchmarks.market_bench`` / ``benchmarks.serving_bench``) with the
+    # same --smoke/--seed/--out flags, run as a separate CI step so its
+    # CSV lands in its own artifact instead of double-running here.
     from benchmarks import (fig2_latency_error, fig3_pareto,
                             mc_kernel_bench, solver_bench,
                             table2_platforms, table3_cost_model,

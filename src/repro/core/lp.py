@@ -29,6 +29,13 @@ float32 with one float64 iterative-refinement step, falling back to the
 full float64 path per row once the barrier parameter is small (the
 normal matrix conditioning grows like 1/mu^2) or whenever the refined
 residual exceeds tolerance.
+
+The power-of-two ladder is also a public batching contract —
+:func:`ladder_widths` / :func:`next_ladder_width` /
+:func:`solve_node_lps_ladder` / :func:`warm_ladder` — used by the
+serving layer (:mod:`repro.serving`) to coalesce multi-tenant requests
+while keeping :func:`stacked_compile_count` flat.  Knob-by-knob
+reference: docs/solver.md.
 """
 from __future__ import annotations
 
@@ -925,6 +932,99 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                             linsolve=linsolve, row_active=row_active,
                             compact=compact, chunk_iters=chunk_iters,
                             newton_dtype=newton_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Width-ladder batch merging (the serving admission policy)
+# ---------------------------------------------------------------------------
+
+def ladder_widths(batch: int) -> list:
+    """Public view of the fixed buffer-width ladder for a maximum batch
+    width: ``batch`` itself plus every power of two below it, descending.
+
+    This is the same ladder the chunked driver compacts over; the
+    serving layer (:mod:`repro.serving`) uses it as its ADMISSION
+    policy — coalesced request batches are padded up to the smallest
+    ladder width that holds them, so the jit cache only ever sees a
+    fixed set of batch shapes and :func:`stacked_compile_count` is
+    bounded by ``len(ladder_widths(ladder_max))`` per solver config.
+    """
+    if batch < 1:
+        raise ValueError(f"ladder needs batch >= 1, got {batch}")
+    return _ladder_widths(int(batch))
+
+
+def next_ladder_width(n_rows: int, ladder_max: int) -> int:
+    """Smallest width in :func:`ladder_widths(ladder_max)` that holds
+    ``n_rows`` — the buffer a merged batch of ``n_rows`` LP rows is
+    padded to."""
+    widths = ladder_widths(ladder_max)
+    if not 1 <= n_rows <= ladder_max:
+        raise ValueError(f"n_rows={n_rows} outside ladder "
+                         f"[1, {ladder_max}]")
+    return _next_width(int(n_rows), widths)
+
+
+def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
+                          max_iters: int = _MAX_ITERS, tol: float = _TOL,
+                          linsolve: str = "xla", compact: bool = False,
+                          chunk_iters=None, newton_dtype: str = "float64"
+                          ) -> LPSolution:
+    """Batch-merge entry point: solve up to ``ladder_max`` same-shape
+    node LPs as ONE stacked call padded to a ladder width.
+
+    The node stack (e.g. several tenants' budget sweeps, concatenated)
+    is padded with retired copies of its first row up to
+    :func:`next_ladder_width` and solved through
+    :func:`solve_lp_stacked` with the padding marked inactive in
+    ``row_active`` — padding rows cost zero IPM iterations and the
+    returned :class:`LPSolution` is sliced back to ``len(nodes)`` rows.
+    Because the batch shape is always one of the fixed ladder widths,
+    :func:`stacked_compile_count` stays FLAT across arbitrary request
+    mixes once each width has compiled (or been warmed via
+    :func:`warm_ladder`).
+
+    ``row_active`` optionally retires a subset of the real rows too
+    (same semantics as :func:`solve_lp_stacked`); the ladder padding is
+    appended to it.
+    """
+    nodes = list(nodes)
+    k = len(nodes)
+    width = next_ladder_width(k, ladder_max)
+    padded = nodes + [nodes[0]] * (width - k)
+    active = np.zeros(width, dtype=bool)
+    active[:k] = True if row_active is None else \
+        np.asarray(row_active, dtype=bool)
+    sol = solve_node_lps_stacked(padded, max_iters=max_iters, tol=tol,
+                                 linsolve=linsolve, row_active=active,
+                                 compact=compact, chunk_iters=chunk_iters,
+                                 newton_dtype=newton_dtype)
+    return LPSolution(*(f[:k] for f in sol))
+
+
+def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
+                tol: float = _TOL, linsolve: str = "xla",
+                compact: bool = False, chunk_iters=None,
+                newton_dtype: str = "float64") -> list:
+    """AOT-warm every ladder width for one node-LP shape: one
+    ALL-RETIRED call per width (every row starts with its ``done`` flag
+    set, so the while-loop trip count is zero and each call costs one
+    compile plus microseconds of run time — the same trick
+    ``compact=True`` plays per-call in ``_warm_compact_ladder``).
+
+    After this returns, a server dispatching merged batches of this
+    shape at any ladder width never compiles again:
+    :func:`stacked_compile_count` is already final.  Returns the warmed
+    widths (descending).
+    """
+    widths = ladder_widths(ladder_max)
+    for w in widths:
+        solve_node_lps_stacked([node] * w, max_iters=max_iters, tol=tol,
+                               linsolve=linsolve,
+                               row_active=np.zeros(w, dtype=bool),
+                               compact=compact, chunk_iters=chunk_iters,
+                               newton_dtype=newton_dtype)
+    return widths
 
 
 # Back-compat variant: same constraint structure, different rhs h (the

@@ -13,9 +13,12 @@ The B&B exploits two observations about Eq. 4 (see DESIGN.md §2):
   budget row is binding at a fractional D.
 
 Node LPs are solved by the jit-compiled JAX interior-point method
-(:mod:`repro.core.lp`); shapes are identical across nodes so the solver
-compiles exactly once per problem size.  Nodes whose IPM solve does not
-converge cleanly are re-solved with HiGHS (robust infeasibility
+(:mod:`repro.core.lp`); shapes are identical across nodes, so the jit
+cache holds a bounded, flat set of solver variants per problem size —
+one under the monolithic driver, one per power-of-two ladder width
+under the chunked ``compact=True`` driver
+(``lp.stacked_compile_count`` tracks it).  Nodes whose IPM solve does
+not converge cleanly are re-solved with HiGHS (robust infeasibility
 certificates).
 """
 from __future__ import annotations
@@ -353,8 +356,9 @@ def solve_bnb_sweep(problem: AllocationProblem, caps,
     work: a vmapped ``while_loop`` on CPU still computes (and
     select-masks) every SIMD row each trip, so early exit does not
     change wall clock there — it quantifies exactly the work a
-    lane-skipping accelerator backend or a future mid-call compaction
-    avoids.  Active rows' iterates are bit-identical either way (rows of
+    lane-skipping accelerator backend avoids, and the work the chunked
+    ``compact=True`` driver below reclaims as wall clock.  Active rows'
+    iterates are bit-identical either way (rows of
     a vmapped solve are independent), which the regression tests in
     ``tests/test_milp.py`` assert.  The mask is traced, so early exit
     never recompiles (``lp.stacked_compile_count`` stays flat as rows

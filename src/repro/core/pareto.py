@@ -224,6 +224,85 @@ def milp_tradeoff_batched(problem: AllocationProblem, n_points: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# Merged-batch frontier slicing (the serving result path)
+# ---------------------------------------------------------------------------
+
+def frontier_nodes(problem: AllocationProblem, caps,
+                   dead: Optional[np.ndarray] = None) -> list:
+    """One relaxation :class:`~repro.core.problem.NodeLP` per budget cap
+    — the LP rows an allocation request expands to before batching.
+
+    All nodes share the constraint matrix; only the budget rhs (the
+    LAST inequality row by construction) varies.  Dead platforms are
+    pinned to zero allocation via the node's variable bounds, exactly
+    as the scenario and market paths do.
+    """
+    from repro.core.scenarios import dead_pin_mask
+    caps = np.asarray(caps, dtype=np.float64)
+    if caps.ndim != 1 or caps.size == 0:
+        raise ValueError(f"caps must be a non-empty 1-D sweep, "
+                         f"got shape {caps.shape}")
+    b0 = dead_pin_mask(dead, problem.tau) if dead is not None else None
+    base = problem.node_lp(cost_cap=float(caps[0]), b_fixed0=b0)
+    nodes = []
+    for ck in caps:
+        h = np.array(base.h)
+        h[-1] = float(ck)
+        nodes.append(base._replace(h=h))
+    return nodes
+
+
+@dataclasses.dataclass
+class TenantFrontier:
+    """One tenant's slice of a merged stacked solve: the LP lower-bound
+    latency-cost frontier over its budget sweep, plus the relaxed
+    allocations (share fractions, usable directly for divisible
+    workloads or as B&B warm starts)."""
+    caps: np.ndarray              # (K,) budget sweep
+    makespans: np.ndarray         # (K,) LP lower-bound makespans
+    allocs: List[np.ndarray]      # K x (mu, tau) relaxed allocations
+    converged: np.ndarray         # (K,) per-row IPM convergence
+
+    def pareto_points(self):
+        """(costs, makespans) of the non-dominated sweep points (the
+        caps are the cost budgets; makespans are the LP bounds)."""
+        mask = pareto_filter(self.caps, self.makespans)
+        return self.caps[mask], self.makespans[mask]
+
+
+def tenant_frontiers(problems, caps_list, sol) -> List[TenantFrontier]:
+    """Slice a MERGED stacked :class:`~repro.core.lp.LPSolution` back
+    into per-tenant frontiers.
+
+    ``sol`` must hold the tenants' rows tenant-major in submission
+    order — tenant ``i``'s rows occupy the contiguous slice starting at
+    ``sum(len(caps_list[:i]))`` — which is exactly how the serving
+    scheduler (and :func:`repro.core.lp.solve_node_lps_ladder`) lays
+    them out.  Rows are independent under ``vmap``, so each slice is
+    identical to what a solo stacked solve of that tenant's sweep
+    returns (to the last ulp for numerically stable rows, <= 1e-8 for
+    ill-conditioned stragglers under the chunked driver).
+    """
+    xs = np.asarray(sol.x)
+    objs = np.asarray(sol.obj)
+    conv = np.asarray(sol.converged)
+    total = sum(len(c) for c in caps_list)
+    if xs.shape[0] < total:
+        raise ValueError(f"merged solution has {xs.shape[0]} rows, "
+                         f"tenants claim {total}")
+    out, off = [], 0
+    for p, caps in zip(problems, caps_list):
+        caps = np.asarray(caps, dtype=np.float64)
+        k = len(caps)
+        sl = slice(off, off + k)
+        allocs = [p.split_node_x(xs[j])[0] for j in range(off, off + k)]
+        out.append(TenantFrontier(caps, objs[sl].copy(), allocs,
+                                  conv[sl].copy()))
+        off += k
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Scenario sweeps: one frontier per scenario through one batched solve
 # ---------------------------------------------------------------------------
 
@@ -248,15 +327,9 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks,
     bounds, not just the latency penalty.
     """
     from repro.core import lp as lpmod
-    from repro.core.scenarios import dead_pin_mask
     nodes = []
     for p, caps, dead in zip(probs, caps_list, dead_masks):
-        b0 = dead_pin_mask(dead, p.tau) if dead is not None else None
-        base = p.node_lp(cost_cap=float(caps[0]), b_fixed0=b0)
-        for ck in caps:
-            h = np.array(base.h)
-            h[-1] = float(ck)
-            nodes.append(base._replace(h=h))
+        nodes.extend(frontier_nodes(p, caps, dead))
     sols = lpmod.solve_node_lps_stacked(nodes, linsolve=linsolve,
                                         compact=compact,
                                         chunk_iters=chunk_iters,

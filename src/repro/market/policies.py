@@ -23,6 +23,12 @@ back to the fastest point when nothing does.
   machinery at higher effort and a finer budget grid, re-solving every
   inter-event interval with full knowledge of the fleet.  Regret is
   measured against it.
+* :class:`ServerBackedPolicy` — Allocation-as-a-Service client: every
+  replan is an :class:`~repro.serving.AllocRequest` against a
+  continuous-batching :class:`~repro.serving.AllocationServer` (so
+  many tenants' replans coalesce into shared stacked-IPM dispatches),
+  with a frontier-lookup battery re-presolved in the background when
+  the live fleet drifts from the anticipated one.
 """
 from __future__ import annotations
 
@@ -246,6 +252,32 @@ class OraclePolicy(WarmMILPPolicy):
 # Presolved scenario-frontier lookup
 # ---------------------------------------------------------------------------
 
+def anticipated_masks(dead: np.ndarray) -> List[np.ndarray]:
+    """The one-event neighbourhood of a fleet state: the current
+    dead-mask, the all-alive mask, every one-extra-departure and every
+    one-arrival variant (deduplicated).  This is the battery both
+    :class:`FrontierLookupPolicy` (as presolved scenarios) and
+    :class:`ServerBackedPolicy` (as background presolve requests)
+    anticipate from."""
+    dead = np.asarray(dead, dtype=bool)
+    masks = [np.array(dead), np.zeros_like(dead)]
+    for i in np.flatnonzero(~dead):        # one extra departure
+        m = np.array(dead)
+        m[i] = True
+        if (~m).sum() >= 1:
+            masks.append(m)
+    for i in np.flatnonzero(dead):         # one arrival
+        m = np.array(dead)
+        m[i] = False
+        masks.append(m)
+    seen, out = set(), []
+    for m in masks:
+        key = m.tobytes()
+        if key not in seen:
+            seen.add(key)
+            out.append(m)
+    return out
+
 @dataclasses.dataclass
 class FrontierLookupPolicy(Policy):
     """Presolve Pareto frontiers for anticipated fleet states, then make
@@ -286,26 +318,10 @@ class FrontierLookupPolicy(Policy):
 
     def _battery(self, view: View):
         from repro.core.scenarios import Scenario, ScenarioSet
-        s = view.dead.shape[0]
-        masks = [np.array(view.dead), np.zeros(s, dtype=bool)]
-        for i in np.flatnonzero(~view.dead):       # one extra departure
-            m = np.array(view.dead)
-            m[i] = True
-            if (~m).sum() >= 1:
-                masks.append(m)
-        for i in np.flatnonzero(view.dead):        # one arrival
-            m = np.array(view.dead)
-            m[i] = False
-            masks.append(m)
-        seen, scen = set(), []
-        ones = np.ones(s)
-        for m in masks:
-            key = m.tobytes()
-            if key in seen:
-                continue
-            seen.add(key)
-            scen.append(Scenario(f"mask_{len(scen)}", ones, ones, ones,
-                                 np.ones(view.problem.tau), m))
+        ones = np.ones(view.dead.shape[0])
+        scen = [Scenario(f"mask_{i}", ones, ones, ones,
+                         np.ones(view.problem.tau), m)
+                for i, m in enumerate(anticipated_masks(view.dead))]
         return ScenarioSet(tuple(scen))
 
     def reset(self, view: View) -> np.ndarray:
@@ -330,3 +346,130 @@ class FrontierLookupPolicy(Policy):
         cands = [_mask_to_alive(view.problem, pt.alloc, view.dead)
                  for pt in tr.points]
         return select_cheapest_slo(view.problem, cands, view.slo_latency)
+
+
+# ---------------------------------------------------------------------------
+# Server-backed replanning (Allocation-as-a-Service client)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServerBackedPolicy(Policy):
+    """Route every replan through a continuous-batching
+    :class:`~repro.serving.AllocationServer`.
+
+    Each replan submits one :class:`~repro.serving.AllocRequest` for
+    the live fleet (an ``n_caps``-point budget sweep with dead slots
+    pinned) at ``priority`` and plans from the returned LP frontier:
+    the relaxed allocations are projected onto the live slots and the
+    cheapest SLO-feasible one wins, with the previous plan kept in the
+    running for continuity.  The solver itself — backend, chunked
+    driver, precision — is the SERVER's configuration; many policy
+    instances (tenants) coalesce into shared stacked dispatches.
+
+    The policy also keeps a :class:`FrontierLookupPolicy`-style battery
+    fresh in the BACKGROUND: at reset it submits one presolve request
+    per anticipated fleet mask (:func:`anticipated_masks`) at
+    ``presolve_priority`` (behind live traffic — presolve rows ride
+    along in the spare ladder capacity of later dispatches), and
+    whenever the live dead-mask drifts more than ``drift_limit``
+    Hamming from every anticipated mask, the battery is re-presolved
+    around the NEW fleet state.  Harvested battery frontiers contribute
+    fallback candidates to every plan, so a replan still has something
+    sensible when its own solve rows fail to converge.
+    """
+    server: Optional[object] = None        # an AllocationServer
+    n_caps: int = 5
+    cap_headroom: float = 1.25
+    drift_limit: int = 1
+    priority: int = 0
+    presolve_priority: int = 10
+    tenant: str = "server_backed"
+    name: str = "server_backed"
+
+    def __post_init__(self):
+        if self.server is None:
+            raise ValueError("ServerBackedPolicy needs an AllocationServer")
+        self._alloc: Optional[np.ndarray] = None
+        self._battery: dict = {}           # mask bytes -> (mask, allocs)
+        self._pending: list = []           # (mask, future)
+        self._anticipated: List[np.ndarray] = []
+
+    def _caps(self, view: View, dead: np.ndarray) -> np.ndarray:
+        c_l, c_u = pareto._cheap_cost_bounds(view.problem, dead)
+        return np.linspace(c_l, max(c_u, c_l) * self.cap_headroom,
+                           self.n_caps)
+
+    def _presolve(self, view: View) -> None:
+        """Queue one background presolve request per anticipated mask
+        (the live fleet's one-event neighbourhood)."""
+        from repro.serving import AllocRequest
+        self._anticipated = anticipated_masks(view.dead)
+        for i, mask in enumerate(self._anticipated):
+            if (~mask).sum() == 0:
+                continue
+            fut = self.server.submit(AllocRequest(
+                f"{self.tenant}/presolve{i}", view.problem,
+                self._caps(view, mask), priority=self.presolve_priority,
+                dead=mask))
+            self._pending.append((mask, fut))
+
+    def _harvest(self) -> None:
+        still = []
+        for mask, fut in self._pending:
+            if fut.done():
+                res = fut.result()
+                self._battery[mask.tobytes()] = (mask, res.frontier.allocs)
+            else:
+                still.append((mask, fut))
+        self._pending = still
+
+    def _battery_candidates(self, view: View) -> List[np.ndarray]:
+        """Projected allocations of the harvested battery entry nearest
+        (Hamming) to the live fleet."""
+        best = None
+        for mask, allocs in self._battery.values():
+            d = int((mask != view.dead).sum())
+            if best is None or d < best[0]:
+                best = (d, allocs)
+        if best is None:
+            return []
+        return [_mask_to_alive(view.problem, a, view.dead)
+                for a in best[1]]
+
+    def _drifted(self, view: View) -> bool:
+        if not self._anticipated:
+            return True
+        return min(int((m != view.dead).sum())
+                   for m in self._anticipated) > self.drift_limit
+
+    def _plan(self, view: View) -> np.ndarray:
+        from repro.serving import AllocRequest
+        self._harvest()
+        res = self.server.request(AllocRequest(
+            self.tenant, view.problem, self._caps(view, view.dead),
+            priority=self.priority, dead=view.dead))
+        conv = np.asarray(res.frontier.converged)
+        cands = [_mask_to_alive(view.problem, a, view.dead)
+                 for a, ok in zip(res.frontier.allocs, conv) if ok]
+        cands += self._battery_candidates(view)
+        if self._alloc is not None:
+            cands.append(_mask_to_alive(view.problem, self._alloc,
+                                        view.dead))
+        if self._drifted(view):
+            # the live fleet left the anticipated neighbourhood:
+            # re-presolve the battery around the new state, in the
+            # background (the results land in later harvests)
+            self._presolve(view)
+        self._alloc = select_cheapest_slo(view.problem, cands,
+                                          view.slo_latency)
+        return self._alloc
+
+    def reset(self, view: View) -> np.ndarray:
+        self._alloc = None
+        self._battery = {}
+        self._pending = []
+        self._presolve(view)
+        return self._plan(view)
+
+    def replan(self, view: View, event) -> np.ndarray:
+        return self._plan(view)

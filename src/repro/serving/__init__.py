@@ -1,0 +1,15 @@
+"""Allocation-as-a-Service: continuous-batching solver serving.
+
+The optimiser itself as a hot multi-tenant service — concurrent tenants
+submit :class:`AllocRequest`\\ s (an allocation problem + budget sweep +
+priority) and get per-tenant Pareto frontiers back via futures, while
+the :class:`AllocationServer` coalesces pending requests into stacked
+interior-point calls over the power-of-two width ladder.  See
+``docs/serving.md`` for the request lifecycle, the ladder admission
+policy and the compile-cache warmup contract.
+"""
+from repro.serving.server import (AllocRequest, AllocResult,
+                                  AllocationServer, DispatchRecord)
+
+__all__ = ["AllocRequest", "AllocResult", "AllocationServer",
+           "DispatchRecord"]

@@ -1,0 +1,333 @@
+"""Allocation-as-a-Service: a continuous-batching allocation server.
+
+Many concurrent tenants submit :class:`AllocRequest`\\ s — each carrying
+an allocation problem, a budget sweep and a priority — and receive
+per-tenant Pareto frontiers back through futures.  The scheduler
+COALESCES pending requests into stacked-IPM calls: every request
+expands to one LP row per budget cap (:func:`repro.core.pareto
+.frontier_nodes`), admitted rows are concatenated tenant-major and
+padded up to the smallest buffer of the power-of-two width ladder
+(:func:`repro.core.lp.ladder_widths` — the same ladder the chunked
+driver compacts over), and ONE :func:`repro.core.lp
+.solve_node_lps_ladder` call serves the whole batch.  Per-tenant
+results are sliced back out with :func:`repro.core.pareto
+.tenant_frontiers`; rows are independent under ``vmap``, so a coalesced
+tenant gets the same answer a solo solve would have produced.
+
+Because the batch shape is always one of the fixed ladder widths, the
+jit cache only ever sees ``len(ladder_widths(ladder_max))`` distinct
+batch shapes per solver config: :meth:`AllocationServer.warmup` AOT-
+compiles all of them up front with one all-retired call per width, so
+cold start is bounded by the number of distinct widths and the steady
+state is ZERO-RECOMPILE — asserted via
+:func:`repro.core.lp.stacked_compile_count` in tests and in
+``benchmarks/serving_bench.py``.
+
+The server runs in two modes sharing one scheduler core:
+
+* **synchronous** — ``submit()`` then :meth:`AllocationServer.pump`
+  (or the :meth:`AllocationServer.request` convenience) drains the
+  queue on the caller's thread: deterministic, what the tests and the
+  market :class:`~repro.market.policies.ServerBackedPolicy` use;
+* **threaded** — :meth:`AllocationServer.start` spawns a scheduler
+  thread that batches whatever has accumulated since the last
+  dispatch: what the latency/throughput benchmark drives with many
+  concurrent submitter threads.  All solver work stays on the
+  scheduler thread; submitters only enqueue and wait on futures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import lp, pareto
+from repro.core.problem import AllocationProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocRequest:
+    """One tenant's allocation/replan request.
+
+    ``caps`` is the budget sweep — the request expands to ``len(caps)``
+    LP rows in the merged batch.  ``priority`` orders admission (lower
+    serves earlier; FIFO within a priority class), so background
+    presolve traffic can ride behind latency-sensitive replans.
+    ``dead`` optionally pins dead platform slots exactly as the market
+    views do.
+    """
+    tenant: str
+    problem: AllocationProblem
+    caps: np.ndarray
+    priority: int = 0
+    dead: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "caps",
+                           np.asarray(self.caps, dtype=np.float64))
+        if self.caps.ndim != 1 or self.caps.size == 0:
+            raise ValueError(f"caps must be a non-empty 1-D sweep, got "
+                             f"shape {self.caps.shape}")
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.caps.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocResult:
+    """What a tenant's future resolves to: its frontier plus how the
+    request was served."""
+    tenant: str
+    frontier: pareto.TenantFrontier
+    latency_s: float              # submit -> resolve wall clock
+    batch_width: int              # ladder buffer width of the dispatch
+    batch_rows: int               # live LP rows in the merged batch
+    coalesced_tenants: int        # requests sharing the dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One scheduler dispatch (one stacked-IPM call)."""
+    n_requests: int
+    n_rows: int
+    width: int
+    solve_wall_s: float
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_rows / self.width
+
+
+class AllocationServer:
+    """Continuous-batching solver server over the stacked-IPM engine.
+
+    ``ladder_max`` bounds the merged batch (in LP rows) and fixes the
+    admission ladder; the solver knobs (``linsolve`` / ``compact`` /
+    ``chunk_iters`` / ``newton_dtype``) thread into every dispatched
+    stacked solve, see :func:`repro.core.lp.solve_lp_stacked`.  All
+    requests must share one node-LP shape (same ``(mu, tau)``): the
+    shape locks on warmup or first dispatch, and a mismatched submit
+    raises rather than recompiling.
+    """
+
+    def __init__(self, *, ladder_max: int = 16, linsolve: str = "xla",
+                 compact: bool = False, chunk_iters: Optional[int] = None,
+                 newton_dtype: str = "float64",
+                 max_iters: Optional[int] = None, tol: Optional[float] = None):
+        if ladder_max < 1:
+            raise ValueError(f"ladder_max must be >= 1, got {ladder_max}")
+        self.ladder_max = int(ladder_max)
+        self._solve_kw = dict(linsolve=linsolve, compact=compact,
+                              chunk_iters=chunk_iters,
+                              newton_dtype=newton_dtype)
+        if max_iters is not None:
+            self._solve_kw["max_iters"] = int(max_iters)
+        if tol is not None:
+            self._solve_kw["tol"] = float(tol)
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._seq = itertools.count()
+        self._pending: List[tuple] = []     # (priority, seq, req, fut, t)
+        self._shape: Optional[Tuple[int, int]] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self.dispatches: List[DispatchRecord] = []
+        self.latencies_s: List[float] = []
+        self._compiles_after_warm: Optional[int] = None
+        self.warmed_widths: list = []
+
+    # -- compile-cache contract ----------------------------------------
+
+    def warmup(self, problem: AllocationProblem,
+               dead: Optional[np.ndarray] = None) -> list:
+        """AOT-compile the whole width ladder for this problem shape:
+        one all-retired warm call per ladder width (zero while-loop
+        trips each, so the cost is ``len(ladder_widths(ladder_max))``
+        compiles).  After warmup :attr:`recompiles_since_warmup` must
+        stay 0 for any mix of same-shape requests — the serving
+        compile-cache contract."""
+        node = pareto.frontier_nodes(
+            problem, [float(problem.single_platform_cost().min())], dead)[0]
+        self._lock_shape(problem)
+        self.warmed_widths = lp.warm_ladder(node, self.ladder_max,
+                                            **self._solve_kw)
+        self._compiles_after_warm = lp.stacked_compile_count()
+        return self.warmed_widths
+
+    @property
+    def recompiles_since_warmup(self) -> Optional[int]:
+        """Stacked-solver compiles since :meth:`warmup` (None before
+        warmup).  Zero in steady state; the benchmark and tests assert
+        it."""
+        if self._compiles_after_warm is None:
+            return None
+        return lp.stacked_compile_count() - self._compiles_after_warm
+
+    def _lock_shape(self, problem: AllocationProblem) -> None:
+        shape = (problem.mu, problem.tau)
+        if self._shape is None:
+            self._shape = shape
+        elif self._shape != shape:
+            raise ValueError(
+                f"problem shaped {shape} does not match the server's "
+                f"locked shape {self._shape}; one server serves one "
+                f"node-LP shape (start another for a different fleet)")
+
+    # -- submission ----------------------------------------------------
+
+    def submit(self, request: AllocRequest) -> Future:
+        """Enqueue a request; returns a future resolving to an
+        :class:`AllocResult`.  Never solves on the calling thread."""
+        if request.n_rows > self.ladder_max:
+            raise ValueError(
+                f"request carries {request.n_rows} budget rows, ladder "
+                f"admits at most {self.ladder_max}; split the sweep")
+        fut: Future = Future()
+        with self._work:
+            self._lock_shape(request.problem)
+            self._pending.append((int(request.priority), next(self._seq),
+                                  request, fut, time.perf_counter()))
+            self._work.notify()
+        return fut
+
+    def request(self, request: AllocRequest,
+                timeout: Optional[float] = None) -> AllocResult:
+        """Submit and wait.  Without a scheduler thread the queue is
+        pumped on this thread (deterministic synchronous mode) — only
+        until THIS request resolves, so lower-priority background
+        traffic behind it stays queued and piggybacks on later
+        dispatches' spare ladder capacity instead of blocking the
+        caller."""
+        fut = self.submit(request)
+        if self._thread is None:
+            while not fut.done() and self.pump():
+                pass
+        return fut.result(timeout=timeout)
+
+    # -- scheduling ----------------------------------------------------
+
+    def _admit(self) -> List[tuple]:
+        """Pop the next coalesced batch off the queue: pending requests
+        in (priority, FIFO) order, admitted while their rows fit the
+        ladder.  Admission never skips ahead past a request that does
+        not fit — head-of-line order is what makes priorities mean
+        something."""
+        self._pending.sort(key=lambda e: (e[0], e[1]))
+        admitted, rows = [], 0
+        while self._pending:
+            entry = self._pending[0]
+            n = entry[2].n_rows
+            if admitted and rows + n > self.ladder_max:
+                break
+            admitted.append(entry)
+            rows += n
+            self._pending.pop(0)
+        return admitted
+
+    def pump(self) -> int:
+        """Drain ONE coalesced batch: admit, dispatch one stacked-IPM
+        call, resolve the batch's futures.  Returns the number of
+        requests served (0 if the queue was empty)."""
+        with self._lock:
+            admitted = self._admit()
+        if not admitted:
+            return 0
+        reqs = [e[2] for e in admitted]
+        submits = [e[4] for e in admitted]
+        nodes = []
+        for r in reqs:
+            nodes.extend(pareto.frontier_nodes(r.problem, r.caps, r.dead))
+        width = lp.next_ladder_width(len(nodes), self.ladder_max)
+        t0 = time.perf_counter()
+        sol = lp.solve_node_lps_ladder(nodes, ladder_max=self.ladder_max,
+                                       **self._solve_kw)
+        wall = time.perf_counter() - t0
+        fronts = pareto.tenant_frontiers([r.problem for r in reqs],
+                                         [r.caps for r in reqs], sol)
+        self.dispatches.append(DispatchRecord(len(reqs), len(nodes), width,
+                                              wall))
+        now = time.perf_counter()
+        for (_, _, req, fut, _), front, t_sub in zip(admitted, fronts,
+                                                     submits):
+            latency = now - t_sub
+            self.latencies_s.append(latency)
+            fut.set_result(AllocResult(req.tenant, front, latency, width,
+                                       len(nodes), len(reqs)))
+        return len(reqs)
+
+    def run_until_idle(self) -> int:
+        """Pump until the queue is empty; returns requests served."""
+        served = 0
+        while True:
+            n = self.pump()
+            if n == 0:
+                return served
+            served += n
+
+    # -- threaded mode -------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the scheduler thread (continuous batching: each
+        dispatch takes whatever accumulated while the previous solve
+        ran)."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop = False
+        self._thread = threading.Thread(target=self._serve, daemon=True,
+                                        name="alloc-server")
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread, by default after draining the
+        queue."""
+        thread = self._thread
+        if thread is None:
+            return
+        with self._work:
+            self._stop = True
+            self._work.notify()
+        thread.join()
+        self._thread = None
+        if drain:
+            self.run_until_idle()
+
+    def _serve(self) -> None:
+        while True:
+            with self._work:
+                while not self._pending and not self._stop:
+                    self._work.wait()
+                if self._stop:
+                    return
+            self.pump()
+
+    def __enter__(self) -> "AllocationServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- observability -------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving statistics since construction: request latency
+        percentiles, dispatch count/occupancy and the compile-cache
+        state."""
+        lat = np.asarray(self.latencies_s, dtype=np.float64)
+        occ = [d.occupancy for d in self.dispatches]
+        return {
+            "requests": int(lat.size),
+            "dispatches": len(self.dispatches),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "mean_occupancy": float(np.mean(occ)) if occ else None,
+            "widths_used": sorted({d.width for d in self.dispatches}),
+            "warmed_widths": list(self.warmed_widths),
+            "recompiles_since_warmup": self.recompiles_since_warmup,
+        }

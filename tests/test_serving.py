@@ -1,0 +1,333 @@
+"""Allocation-as-a-Service: request coalescing, ladder admission,
+per-tenant parity with solo solves, and the zero-recompile steady-state
+contract of the continuous-batching server."""
+import numpy as np
+import pytest
+
+from repro.core import lp, pareto
+from repro.core.problem import AllocationProblem
+from repro.serving import AllocRequest, AllocationServer
+
+
+def _problem(seed=0, mu=4, tau=6):
+    rng = np.random.default_rng(seed)
+    return AllocationProblem(rng.uniform(0.5, 2.0, (mu, tau)) * 1e-3,
+                             rng.uniform(0.1, 1.0, (mu, tau)),
+                             rng.uniform(50.0, 200.0, tau),
+                             rng.uniform(60.0, 600.0, mu),
+                             rng.uniform(0.1, 2.0, mu))
+
+
+def _caps(problem, k, lo=1.0, hi=3.0):
+    c_l = float(problem.single_platform_cost().min())
+    return np.linspace(lo * c_l, hi * c_l, k)
+
+
+# ---------------------------------------------------------------------------
+# The ladder / batch-merge entry points (core/lp.py)
+# ---------------------------------------------------------------------------
+
+def test_ladder_widths_public():
+    assert lp.ladder_widths(16) == [16, 8, 4, 2, 1]
+    assert lp.ladder_widths(20) == [20, 16, 8, 4, 2, 1]
+    assert lp.ladder_widths(1) == [1]
+    with pytest.raises(ValueError):
+        lp.ladder_widths(0)
+
+
+def test_next_ladder_width():
+    assert lp.next_ladder_width(5, 16) == 8
+    assert lp.next_ladder_width(8, 16) == 8
+    assert lp.next_ladder_width(9, 16) == 16
+    assert lp.next_ladder_width(1, 16) == 1
+    with pytest.raises(ValueError):
+        lp.next_ladder_width(17, 16)
+    with pytest.raises(ValueError):
+        lp.next_ladder_width(0, 16)
+
+
+def test_solve_node_lps_ladder_matches_unpadded():
+    """The merged entry point pads to a ladder width with retired rows;
+    the real rows must match a plain stacked solve of the same nodes."""
+    p = _problem(1)
+    nodes = pareto.frontier_nodes(p, _caps(p, 5))
+    plain = lp.solve_node_lps_stacked(nodes, row_active=np.ones(5, bool))
+    padded = lp.solve_node_lps_ladder(nodes, ladder_max=16)
+    assert np.asarray(padded.obj).shape == (5,)
+    np.testing.assert_allclose(np.asarray(padded.obj),
+                               np.asarray(plain.obj), rtol=1e-8)
+    np.testing.assert_allclose(np.asarray(padded.x),
+                               np.asarray(plain.x), atol=1e-7)
+
+
+def test_warm_ladder_costs_zero_iterations():
+    """Every warm call is all-retired: zero IPM iterations per width,
+    and the warmed widths cover the ladder."""
+    p = _problem(2)
+    node = pareto.frontier_nodes(p, _caps(p, 1))[0]
+    with lp.newton_ledger() as led:
+        widths = lp.warm_ladder(node, 8)
+    assert widths == [8, 4, 2, 1]
+    # all-retired rows never enter the ledger at all
+    assert led["active_rows"] == 0 and led["calls"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant frontier slicing (core/pareto.py)
+# ---------------------------------------------------------------------------
+
+def test_frontier_nodes_vary_only_budget_rhs():
+    p = _problem(3)
+    caps = _caps(p, 4)
+    nodes = pareto.frontier_nodes(p, caps)
+    assert len(nodes) == 4
+    base = nodes[0]
+    for ck, n in zip(caps, nodes):
+        assert n.h[-1] == ck                      # cost row is last
+        np.testing.assert_array_equal(n.g, base.g)
+        np.testing.assert_array_equal(n.h[:-1], base.h[:-1])
+    with pytest.raises(ValueError):
+        pareto.frontier_nodes(p, [])
+
+
+def test_tenant_frontiers_slice_merged_batch():
+    """Tenant-major slicing out of one merged stacked solve recovers
+    each tenant's solo frontier."""
+    probs = [_problem(10), _problem(11), _problem(12)]
+    caps_list = [_caps(probs[0], 2), _caps(probs[1], 3), _caps(probs[2], 4)]
+    nodes = []
+    for p, caps in zip(probs, caps_list):
+        nodes.extend(pareto.frontier_nodes(p, caps))
+    sol = lp.solve_node_lps_stacked(nodes)
+    fronts = pareto.tenant_frontiers(probs, caps_list, sol)
+    assert [len(f.caps) for f in fronts] == [2, 3, 4]
+    off = 0
+    for p, caps, f in zip(probs, caps_list, fronts):
+        solo = lp.solve_node_lps_stacked(pareto.frontier_nodes(p, caps))
+        np.testing.assert_allclose(f.makespans, np.asarray(solo.obj),
+                                   rtol=1e-8)
+        assert len(f.allocs) == len(caps)
+        assert f.allocs[0].shape == (p.mu, p.tau)
+        off += len(caps)
+    with pytest.raises(ValueError):
+        pareto.tenant_frontiers(probs, [np.ones(9)] * 3, sol)
+
+
+# ---------------------------------------------------------------------------
+# Request coalescing: admission widths, parity, compile flatness
+# ---------------------------------------------------------------------------
+
+def test_mixed_size_batches_land_in_correct_ladder_width():
+    """Mixed-size tenant sweeps coalesce into ONE dispatch padded to
+    the smallest ladder width that holds their total row count."""
+    p = _problem(4)
+    srv = AllocationServer(ladder_max=16)
+    srv.warmup(p)
+    for sizes, want_width in [((2, 3), 8), ((1,), 1), ((4, 4, 5), 16),
+                              ((2, 2), 4)]:
+        futs = [srv.submit(AllocRequest(f"t{i}", p, _caps(p, k)))
+                for i, k in enumerate(sizes)]
+        assert srv.pump() == len(sizes)
+        disp = srv.dispatches[-1]
+        assert disp.width == want_width
+        assert disp.n_rows == sum(sizes)
+        for f, k in zip(futs, sizes):
+            res = f.result(timeout=0)
+            assert res.batch_width == want_width
+            assert res.coalesced_tenants == len(sizes)
+            assert len(res.frontier.caps) == k
+
+
+def test_coalesced_results_match_solo_solves():
+    """Per-tenant frontiers sliced from a coalesced dispatch match what
+    a solo ``solve_lp_stacked`` of each tenant's sweep returns.  Rows
+    are independent under ``vmap``, so converged rows agree to <= 1e-8
+    (acceptance bar); on a fixed backend the well-conditioned rows are
+    in practice bit-identical."""
+    probs = [_problem(20), _problem(21), _problem(22)]
+    caps_list = [_caps(probs[0], 3), _caps(probs[1], 5, 1.2, 2.5),
+                 _caps(probs[2], 4, 1.0, 4.0)]
+    srv = AllocationServer(ladder_max=16)
+    srv.warmup(probs[0])
+    futs = [srv.submit(AllocRequest(f"t{i}", p, caps))
+            for i, (p, caps) in enumerate(zip(probs, caps_list))]
+    assert srv.pump() == 3                       # one coalesced dispatch
+    for p, caps, fut in zip(probs, caps_list, futs):
+        solo = lp.solve_node_lps_stacked(pareto.frontier_nodes(p, caps))
+        merged = fut.result(timeout=0).frontier
+        np.testing.assert_allclose(
+            merged.makespans, np.asarray(solo.obj), rtol=1e-8,
+            err_msg="coalesced frontier drifted from the solo solve")
+        solo_allocs = [p.split_node_x(np.asarray(solo.x)[j])[0]
+                       for j in range(len(caps))]
+        for a, b in zip(merged.allocs, solo_allocs):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_compile_count_flat_across_multi_tenant_episode():
+    """After warmup, an episode of arbitrary tenant mixes — different
+    request counts, sweep sizes and priorities — never recompiles the
+    stacked solver: every dispatch shape is a pre-warmed ladder
+    width."""
+    p = _problem(5)
+    srv = AllocationServer(ladder_max=16)
+    srv.warmup(p)
+    assert srv.recompiles_since_warmup == 0
+    baseline = lp.stacked_compile_count()
+    rng = np.random.default_rng(0)
+    for _ in range(6):                           # six mix waves
+        n_tenants = int(rng.integers(1, 5))
+        for i in range(n_tenants):
+            srv.submit(AllocRequest(f"t{i}", p,
+                                    _caps(p, int(rng.integers(1, 6))),
+                                    priority=int(rng.integers(0, 3))))
+        srv.run_until_idle()
+    assert lp.stacked_compile_count() == baseline
+    assert srv.recompiles_since_warmup == 0
+    assert srv.stats()["requests"] == srv.stats()["requests"]  # populated
+    assert set(srv.stats()["widths_used"]) <= set(srv.warmed_widths)
+
+
+def test_warmup_cold_start_bounded_by_widths():
+    """Cold start compiles at most one stacked variant per ladder width
+    (plus nothing else): the AOT-warm contract."""
+    p = _problem(6, mu=3, tau=5)                 # fresh shape
+    before = lp.stacked_compile_count()
+    srv = AllocationServer(ladder_max=8)
+    widths = srv.warmup(p)
+    grown = lp.stacked_compile_count() - before
+    assert widths == [8, 4, 2, 1]
+    assert 0 < grown <= len(widths)
+    # a second warmup of the same shape compiles nothing
+    again = lp.stacked_compile_count()
+    srv2 = AllocationServer(ladder_max=8)
+    srv2.warmup(p)
+    assert lp.stacked_compile_count() == again
+
+
+def test_admission_respects_priority_and_ladder():
+    """Low-priority (background) requests queue behind live traffic and
+    ride along only in spare ladder capacity."""
+    p = _problem(7)
+    srv = AllocationServer(ladder_max=8)
+    srv.warmup(p)
+    slow = srv.submit(AllocRequest("bg", p, _caps(p, 6), priority=10))
+    live = srv.submit(AllocRequest("live", p, _caps(p, 5), priority=0))
+    assert srv.pump() == 1                       # live alone (6+5 > 8)
+    assert live.done() and not slow.done()
+    assert srv.pump() == 1                       # background drains next
+    assert slow.done()
+    # spare-capacity piggyback: live (2 rows) + background (3 rows) fit
+    bg2 = srv.submit(AllocRequest("bg2", p, _caps(p, 3), priority=10))
+    live2 = srv.submit(AllocRequest("live2", p, _caps(p, 2), priority=0))
+    assert srv.pump() == 2
+    assert live2.done() and bg2.done()
+    assert live2.result(timeout=0).coalesced_tenants == 2
+
+
+def test_submit_validates_shape_and_size():
+    p = _problem(8)
+    srv = AllocationServer(ladder_max=4)
+    srv.warmup(p)
+    with pytest.raises(ValueError):              # sweep exceeds ladder
+        srv.submit(AllocRequest("t", p, _caps(p, 5)))
+    with pytest.raises(ValueError):              # different node shape
+        srv.submit(AllocRequest("t", _problem(9, mu=6, tau=3),
+                                _caps(_problem(9, mu=6, tau=3), 2)))
+    with pytest.raises(ValueError):              # empty sweep
+        AllocRequest("t", p, np.array([]))
+
+
+def test_threaded_server_serves_concurrent_tenants():
+    """The scheduler thread coalesces concurrent submitters and
+    resolves every future; solver work stays on one thread."""
+    p = _problem(13)
+    srv = AllocationServer(ladder_max=16)
+    srv.warmup(p)
+    baseline = lp.stacked_compile_count()
+    import threading
+    results = {}
+
+    def tenant(i):
+        req = AllocRequest(f"t{i}", p, _caps(p, 1 + i % 4))
+        results[i] = srv.submit(req).result(timeout=60)
+
+    with srv:
+        threads = [threading.Thread(target=tenant, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == 8
+    assert all(r.frontier.makespans.shape == (1 + i % 4,)
+               for i, r in results.items())
+    assert lp.stacked_compile_count() == baseline
+
+
+# ---------------------------------------------------------------------------
+# ServerBackedPolicy: replans through the server, battery re-presolve
+# ---------------------------------------------------------------------------
+
+def _market_fixture():
+    from repro.market import events as mev
+    from repro.market import simulator as msim
+    p = _problem(30, mu=4, tau=6)
+    catalog = msim.catalog_from_problem(p)
+    episodes = mev.standard_episodes(
+        [k.name for k in catalog], n_episodes=1, horizon_s=3600.0,
+        seed=11, n_initial=3, max_platforms=6)
+    return p, catalog, episodes[0]
+
+
+def test_server_backed_policy_episode_no_recompile():
+    from repro.market import simulator as msim
+    from repro.market.policies import ServerBackedPolicy
+    p, catalog, episode = _market_fixture()
+    slo, _ = msim.slo_for_episode(catalog, p.n, episode)
+    srv = AllocationServer(ladder_max=32)
+    srv.warmup(msim.Fleet.from_episode(catalog, p.n, episode).problem())
+    policy = ServerBackedPolicy(server=srv, n_caps=5)
+    res = msim.run_episode(catalog, p.n, episode, policy, slo_latency=slo)
+    assert res.no_recompile
+    assert srv.recompiles_since_warmup == 0
+    assert all(np.isfinite(iv.makespan) and iv.makespan > 0
+               for iv in res.intervals)
+    # background presolve requests were queued and are drainable
+    # without recompiling either
+    srv.run_until_idle()
+    assert srv.recompiles_since_warmup == 0
+    st = srv.stats()
+    assert st["requests"] > len(res.intervals) // 2   # live + presolve
+
+
+def test_server_backed_policy_battery_refresh_on_drift():
+    from repro.market import simulator as msim
+    from repro.market.policies import ServerBackedPolicy
+    p, catalog, episode = _market_fixture()
+    slo, _ = msim.slo_for_episode(catalog, p.n, episode)
+    srv = AllocationServer(ladder_max=32)
+    fleet = msim.Fleet.from_episode(catalog, p.n, episode)
+    srv.warmup(fleet.problem())
+    policy = ServerBackedPolicy(server=srv, n_caps=4, drift_limit=0)
+    view = fleet.view(0.0, slo)
+    policy.reset(view)
+    n_pending0 = len(policy._pending)
+    assert n_pending0 > 0                        # battery queued at reset
+    srv.run_until_idle()
+    policy._harvest()
+    assert policy._battery                       # presolves harvested
+    # drift the fleet two departures past the anticipated neighbourhood
+    alive = np.flatnonzero(~view.dead)
+    drifted = np.array(view.dead)
+    drifted[alive[:2]] = True
+    view2 = type(view)(view.problem, drifted, view.pin, 1.0, slo)
+    policy.replan(view2, None)
+    assert len(policy._pending) > 0              # re-presolve queued
+    assert policy._alloc is not None
+
+
+def test_server_backed_policy_requires_server():
+    from repro.market.policies import ServerBackedPolicy
+    with pytest.raises(ValueError):
+        ServerBackedPolicy()

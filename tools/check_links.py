@@ -1,0 +1,82 @@
+"""Intra-repo markdown link checker (CI docs gate).
+
+Scans the repo's markdown (``docs/*.md``, ``README.md``, and the other
+root-level ``*.md`` files) for inline links/images ``[text](target)``
+and fails when a *repo-relative* target does not exist.  External
+schemes (http/https/mailto), pure in-page anchors (``#section``) and
+bare-URL autolinks are skipped; a ``file.md#anchor`` target is checked
+for the file only.  Links inside fenced code blocks are ignored (docs
+quote code that happens to contain brackets).
+
+    python tools/check_links.py [root]
+
+Exit status: 0 when every link resolves, 1 otherwise (broken links are
+listed as ``file:line: target``).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline [text](target) / ![alt](target); target ends at the first
+# unescaped ')' — fine for this repo's plain relative paths
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```|~~~)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _markdown_files(root: pathlib.Path) -> list:
+    files = sorted(root.glob("*.md")) + sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list:
+    """Returns ``(line_no, target)`` for every broken link in ``path``."""
+    broken = []
+    in_fence = False
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                broken.append((i, f"{target} (escapes repo)"))
+                continue
+            if not resolved.exists():
+                broken.append((i, target))
+    return broken
+
+
+def main() -> None:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    files = _markdown_files(root)
+    if not files:
+        print(f"check_links: no markdown files under {root}", file=sys.stderr)
+        sys.exit(1)
+    n_broken = 0
+    for f in files:
+        for line_no, target in check_file(f, root):
+            print(f"{f.relative_to(root)}:{line_no}: {target}",
+                  file=sys.stderr)
+            n_broken += 1
+    if n_broken:
+        print(f"check_links: {n_broken} broken link(s) across "
+              f"{len(files)} file(s)", file=sys.stderr)
+        sys.exit(1)
+    print(f"check_links: OK ({len(files)} markdown files)")
+
+
+if __name__ == "__main__":
+    main()

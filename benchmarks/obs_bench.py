@@ -1,0 +1,161 @@
+"""Observability benchmark: the telemetry layer's own cost plus the
+registry-sourced serving/market latency rows (beyond-paper subsystem).
+
+* ``obs.overhead`` — per-span cost of the DISABLED fast path (what
+  every instrumented hot path pays in production) next to the enabled
+  recording cost; the disabled bound is asserted, so CI fails if
+  ``obs.span`` stops being a strict no-op;
+* ``serving.queue_wait_p99`` — tail queue wait (submit -> dispatch
+  start) of a coalesced multi-tenant wave, from the server's
+  per-request latency breakdown;
+* ``market.replan.span_ms`` — per-event replan latency of a market
+  episode, read back from the ``market.replan_ms`` registry histogram
+  the simulator records.
+
+Rows feed ``benchmarks.run --json-out`` and are gated by
+``benchmarks/compare.py`` against the committed ``BENCH_solver.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import experiment_problem, seeded, smoke_scaled
+from repro import obs
+from repro.market import events as mev
+from repro.market import simulator as msim
+from repro.market.policies import ResplitPolicy
+from repro.serving import AllocRequest, AllocationServer
+
+# per-span budget for the disabled fast path (one flag test + one
+# shared-singleton context manager).  Measured ~0.1-0.3 us on CPU; the
+# bound is generous for noisy CI machines but still catches an
+# accidental always-on collector (>= several us) immediately.
+DISABLED_SPAN_BUDGET_US = 5.0
+
+
+def _span_overhead_row() -> tuple:
+    n = smoke_scaled(200_000, 50_000)
+
+    def loop_bare():
+        t0 = time.perf_counter()
+        x = 0
+        for _ in range(n):
+            x += 1
+        return time.perf_counter() - t0
+
+    def loop_span():
+        t0 = time.perf_counter()
+        x = 0
+        for _ in range(n):
+            with obs.span("bench.noop"):
+                x += 1
+        return time.perf_counter() - t0
+
+    # measure the disabled path even if the driver runs with --trace-out
+    was_enabled = obs.enabled()
+    obs.disable()
+    bare = min(loop_bare() for _ in range(3))
+    spanned = min(loop_span() for _ in range(3))
+    disabled_us = max(spanned - bare, 0.0) / n * 1e6
+
+    n_live = smoke_scaled(20_000, 5_000)
+    obs.enable(reset=False)
+    t0 = time.perf_counter()
+    for _ in range(n_live):
+        with obs.span("bench.live"):
+            pass
+    enabled_us = (time.perf_counter() - t0) / n_live * 1e6
+    if not was_enabled:
+        obs.disable()
+    # drop the calibration spans; keep whatever the driver was tracing
+    obs.drop_events("bench.live")
+
+    assert disabled_us < DISABLED_SPAN_BUDGET_US, \
+        f"disabled obs.span costs {disabled_us:.2f}us/span " \
+        f"(budget {DISABLED_SPAN_BUDGET_US}us) — no longer a no-op"
+    return ("obs.overhead", disabled_us,
+            f"disabled_ns={disabled_us * 1e3:.0f};"
+            f"enabled_ns={enabled_us * 1e3:.0f};"
+            f"budget_us={DISABLED_SPAN_BUDGET_US};spans={n};ok")
+
+
+def _serving_breakdown_row(rng) -> tuple:
+    fitted, *_ = experiment_problem(smoke_scaled(12, 8),
+                                    smoke_scaled(6, 4), seed=9)
+    srv = AllocationServer(ladder_max=smoke_scaled(16, 8))
+    srv.warmup(fitted)
+    c_l = float(fitted.single_platform_cost().min())
+    for wave in range(smoke_scaled(6, 3)):
+        for i in range(smoke_scaled(6, 4)):
+            k = int(rng.integers(1, 5))
+            caps = np.linspace(rng.uniform(1.0, 1.5) * c_l,
+                               rng.uniform(2.0, 4.0) * c_l, k)
+            srv.submit(AllocRequest(f"t{i}", fitted, caps,
+                                    priority=int(rng.integers(0, 3))))
+        srv.run_until_idle()
+    st = srv.stats()
+    bd = st["breakdown"]
+    assert st["recompiles_since_warmup"] == 0
+    return ("serving.queue_wait_p99", bd["queue_wait_p99_ms"] * 1e3,
+            f"queue_wait_p50_ms={bd['queue_wait_p50_ms']:.3f};"
+            f"solve_p50_ms={bd['solve_p50_ms']:.1f};"
+            f"slice_p50_ms={bd['slice_p50_ms']:.1f};"
+            f"requests={st['requests']}")
+
+
+def _market_replan_row() -> tuple:
+    fitted, *_ = experiment_problem(smoke_scaled(12, 8),
+                                    smoke_scaled(6, 4), seed=3)
+    catalog = msim.catalog_from_problem(fitted)
+    episode = mev.standard_episodes(
+        [k.name for k in catalog], n_episodes=1, horizon_s=3600.0,
+        seed=seeded(11), n_initial=min(3, len(catalog)),
+        max_platforms=smoke_scaled(8, 6))[0]
+    slo, _ = msim.slo_for_episode(catalog, fitted.n, episode)
+    with obs.scope() as scoped:
+        msim.run_episode(catalog, fitted.n, episode, ResplitPolicy(),
+                         slo_latency=slo)
+    spans_ms = scoped["histograms"].get("market.replan_ms", [])
+    assert spans_ms, "simulator recorded no market.replan_ms samples"
+    p50 = float(np.percentile(spans_ms, 50))
+    p99 = float(np.percentile(spans_ms, 99))
+    return ("market.replan.span_ms", p50 * 1e3,
+            f"p50_ms={p50:.3f};p99_ms={p99:.3f};"
+            f"events={len(spans_ms)};policy=resplit")
+
+
+def run() -> list:
+    rng = np.random.default_rng(seeded(23))
+    return [_span_overhead_row(),
+            _serving_breakdown_row(rng),
+            _market_replan_row()]
+
+
+def main() -> None:
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if args.seed is not None:
+        os.environ["REPRO_BENCH_SEED"] = str(args.seed)
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
+    for name, us, derived in run():
+        line = f"{name},{us:.1f},{derived}"
+        lines.append(line)
+        print(line, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

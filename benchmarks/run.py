@@ -26,6 +26,15 @@ def main() -> None:
                          "BENCH_solver.json) with every row plus run "
                          "metadata — the machine-readable bench "
                          "trajectory uploaded from CI")
+    ap.add_argument("--trace-out", default=None,
+                    help="record obs spans for the whole run and write "
+                         "a Chrome trace-event JSON here (open in "
+                         "ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="also run the jax profiler over the suite, "
+                         "writing its trace into this directory; obs "
+                         "spans mirror into jax named scopes so host "
+                         "spans line up with device activity")
     args = ap.parse_args()
     for path in (args.out, args.json_out):
         if path:
@@ -44,9 +53,10 @@ def main() -> None:
     # same --smoke/--seed/--out flags, run as a separate CI step so its
     # CSV lands in its own artifact instead of double-running here.
     from benchmarks import (fig2_latency_error, fig3_pareto,
-                            mc_kernel_bench, solver_bench,
+                            mc_kernel_bench, obs_bench, solver_bench,
                             table2_platforms, table3_cost_model,
                             table4_tradeoff)
+    from repro import obs
     modules = [
         ("table2", table2_platforms),
         ("table3", table3_cost_model),
@@ -55,13 +65,21 @@ def main() -> None:
         ("fig3", fig3_pareto),
         ("solver", solver_bench),
         ("mc_kernel", mc_kernel_bench),
+        ("obs", obs_bench),
     ]
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
+    if args.trace_out or args.profile_dir:
+        obs.enable(jax_profiler=bool(args.profile_dir))
     lines = ["name,us_per_call,derived"]
     print(lines[0])
     failed = 0
     for name, mod in modules:
         try:
-            for row in mod.run():
+            with obs.span(f"bench.{name}"):
+                rows = mod.run()
+            for row in rows:
                 n, us, derived = row
                 line = f"{n},{us:.1f},{derived}"
                 lines.append(line)
@@ -72,6 +90,15 @@ def main() -> None:
             line = f"{name}.FAILED,0,error"
             lines.append(line)
             print(line, flush=True)
+    if args.trace_out or args.profile_dir:
+        obs.disable()
+    if args.profile_dir:
+        import jax
+        jax.profiler.stop_trace()
+    if args.trace_out:
+        n_spans = obs.export_chrome_trace(args.trace_out)
+        print(f"# wrote {n_spans} spans to {args.trace_out}",
+              flush=True)
     if args.out:
         with open(args.out, "w") as f:
             f.write("\n".join(lines) + "\n")

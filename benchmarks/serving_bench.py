@@ -109,11 +109,18 @@ def run() -> list:
     recompiles = lp.stacked_compile_count() - baseline
     assert recompiles == 0, \
         f"stacked solver recompiled {recompiles}x after warmup"
-    assert srv.recompiles_since_warmup == \
-        lp.stacked_compile_count() - compiles_after_warm
+    # per-config attribution: the solo reference solves above may have
+    # compiled NON-ladder widths (moving the global count), but zero of
+    # those events belong to this server's (shape, config, ladder) key
+    assert lp.stacked_compile_count() >= compiles_after_warm
+    assert srv.recompiles_since_warmup == 0, \
+        f"server attributed {srv.recompiles_since_warmup} recompiles"
+    bd = srv.stats()["breakdown"]
     rows.append(("serving.steady_state", 0.0,
                  f"recompiles_after_warmup={recompiles};"
-                 f"parity_vs_solo={max_diff:.2e};ok"))
+                 f"parity_vs_solo={max_diff:.2e};"
+                 f"queue_wait_p99_ms={bd['queue_wait_p99_ms']:.3f};"
+                 f"solve_p50_ms={bd['solve_p50_ms']:.1f};ok"))
     return rows
 
 

@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 _ETA = 0.99995          # fraction-to-boundary
 _MAX_ITERS = 100
 _TOL = 1e-9
@@ -519,15 +521,21 @@ def stacked_compile_count() -> int:
 # iterations it actually ran, and ``compact_rows`` records what the
 # chunked driver really paid (buffer width x chunk trips, summed).
 # ``solver_bench`` reports the reductions.
-_NEWTON_STATS = {"calls": 0, "lockstep_rows": 0, "active_rows": 0,
-                 "compact_rows": 0, "f32_rows": 0, "f64_rows": 0,
-                 "fallback_rows": 0, "nonconverged_rows": 0, "hist": {}}
+#
+# The ledger lives in the process-wide ``repro.obs`` metrics registry
+# (counters ``lp.newton.*`` plus the raw per-row iteration histogram
+# ``lp.newton.iters``): every record is one atomic registry update, so
+# concurrent recorders (an ``AllocationServer`` scheduler thread next to
+# the main thread) never lose counts, and ``obs.snapshot()`` reports the
+# ledger alongside serving/market metrics.  The functions below keep the
+# historical dict-shaped API.
+_NEWTON_KEYS = ("calls", "lockstep_rows", "active_rows", "compact_rows",
+                "f32_rows", "f64_rows", "fallback_rows",
+                "nonconverged_rows")
 
 
 def reset_newton_row_stats() -> None:
-    _NEWTON_STATS.update(calls=0, lockstep_rows=0, active_rows=0,
-                         compact_rows=0, f32_rows=0, f64_rows=0,
-                         fallback_rows=0, nonconverged_rows=0, hist={})
+    obs.REGISTRY.reset("lp.newton")
 
 
 def newton_row_stats() -> dict:
@@ -553,8 +561,12 @@ def newton_row_stats() -> dict:
     Use :func:`newton_ledger` to scope accumulation to one top-level
     solve or benchmark run.
     """
-    out = dict(_NEWTON_STATS)
-    out["hist"] = dict(_NEWTON_STATS["hist"])
+    out = {k: int(obs.read_counter(f"lp.newton.{k}")) for k in _NEWTON_KEYS}
+    hist: dict = {}
+    for it in obs.read_hist("lp.newton.iters"):
+        b = 10 * int(it // 10)
+        hist[b] = hist.get(b, 0) + 1
+    out["hist"] = hist
     return out
 
 
@@ -571,22 +583,18 @@ def newton_ledger():
         with lp.newton_ledger() as led:
             pareto.milp_tradeoff_batched(problem, ...)
         print(led["active_rows"], led["lockstep_rows"])
+
+    This is a thin wrapper over the generic ``obs.scope()`` registry
+    frame — the scope covers EVERY metric recorded inside the block, so
+    serving/market counters nest the same way; the yielded dict keeps
+    the historical ledger shape.
     """
-    outer = newton_row_stats()
-    reset_newton_row_stats()
-    scoped: dict = {}
-    try:
-        yield scoped
-    finally:
-        inner = newton_row_stats()
-        scoped.update(inner)
-        merged_hist = dict(outer["hist"])
-        for k, v in inner["hist"].items():
-            merged_hist[k] = merged_hist.get(k, 0) + v
-        for key in _NEWTON_STATS:
-            if key != "hist":
-                _NEWTON_STATS[key] = outer[key] + inner[key]
-        _NEWTON_STATS["hist"] = merged_hist
+    with obs.scope():
+        scoped: dict = {}
+        try:
+            yield scoped
+        finally:
+            scoped.update(newton_row_stats())
 
 
 def _record_newton_rows(iters, active, converged=None, it32=None, bad=None,
@@ -596,27 +604,31 @@ def _record_newton_rows(iters, active, converged=None, it32=None, bad=None,
     act = iters[active]
     if act.size == 0:
         return
-    st = _NEWTON_STATS
-    st["calls"] += 1
     lockstep = int(iters.shape[0] * act.max())
-    st["lockstep_rows"] += lockstep
-    st["active_rows"] += int(act.sum())
-    st["compact_rows"] += (lockstep if compact_rows is None
-                           else int(compact_rows))
+    n_act = int(act.sum())
+    counters = {
+        "lp.newton.calls": 1,
+        "lp.newton.lockstep_rows": lockstep,
+        "lp.newton.active_rows": n_act,
+        "lp.newton.compact_rows": (lockstep if compact_rows is None
+                                   else int(compact_rows)),
+    }
     if it32 is not None:
         f32 = int(np.asarray(it32)[active].sum())
-        st["f32_rows"] += f32
-        st["f64_rows"] += int(act.sum()) - f32
+        counters["lp.newton.f32_rows"] = f32
+        counters["lp.newton.f64_rows"] = n_act - f32
     else:
-        st["f64_rows"] += int(act.sum())
+        counters["lp.newton.f64_rows"] = n_act
     if bad is not None:
-        st["fallback_rows"] += int(np.asarray(bad)[active].sum())
+        counters["lp.newton.fallback_rows"] = \
+            int(np.asarray(bad)[active].sum())
     if converged is not None:
-        st["nonconverged_rows"] += int((~np.asarray(converged))[active].sum())
-    hist = st["hist"]
-    for it in act:
-        b = 10 * int(it // 10)
-        hist[b] = hist.get(b, 0) + 1
+        counters["lp.newton.nonconverged_rows"] = \
+            int((~np.asarray(converged))[active].sum())
+    # one atomic registry update per stacked call: concurrent recorders
+    # (server scheduler thread + main thread) cannot interleave halves
+    obs.update(counters=counters,
+               observations={"lp.newton.iters": act.tolist()})
 
 
 # ---------------------------------------------------------------------------
@@ -738,8 +750,9 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     warm_key = (a_h.shape[1:], chunk_iters, max_iters, linsolve,
                 newton_dtype, tuple(widths))
     if warm_key not in _WARMED_LADDERS:
-        _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn, step_fn,
-                             tol_dev)
+        with obs.span("lp.warm_compact_ladder", widths=tuple(widths)):
+            _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn,
+                                 step_fn, tol_dev)
         _WARMED_LADDERS.add(warm_key)
 
     carry = init_fn(a, b, c, u, jnp.asarray(active, dtype=bool))
@@ -760,8 +773,10 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     # every chunk advances every active row by >= 1 iteration, so
     # max_iters chunks always suffice; +2 pads the all-retired first call
     for _ in range(max_iters + 2):
-        carry, rp, rd, mu = step_fn(tol_dev, *cur, carry)
-        host = jax.device_get((carry, rp, rd, mu))   # one transfer per chunk
+        with obs.span("lp.chunk", width=width):
+            carry, rp, rd, mu = step_fn(tol_dev, *cur, carry)
+            # one transfer per chunk
+            host = jax.device_get((carry, rp, rd, mu))
         ch = dict(zip(_IPMCarry._fields, host[0]))
         rp_h, rd_h, mu_h = host[1:]
         valid = orig >= 0
@@ -790,23 +805,26 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
         if w_next < width:
             # compact: survivors to the front, tail padded with retired
             # copies of the first survivor (done=True -> zero trips)
-            take = np.concatenate([idx, np.repeat(idx[:1],
-                                                  w_next - idx.size)])
-            fields = {f: np.array(ch[f][take])
-                      for f in _IPMCarry._fields}
-            fields["done"][idx.size:] = True
-            carry = _IPMCarry(**{f: jnp.asarray(v)
-                                 for f, v in fields.items()})
-            # the std-form buffers live in ORIGINAL row order: gather by
-            # the surviving rows' original indices, not buffer slots
-            src = orig[take]
-            cur = tuple(jnp.asarray(v[src])
-                        for v in (a_h, b_h, c_h, u_h))
-            orig = src
-            orig[idx.size:] = -1
-            width = w_next
-            it_prev = fields["it"][:]
-            it32_prev = fields["it32"][:]
+            with obs.span("lp.compact_gather", from_width=width,
+                          to_width=w_next, survivors=int(idx.size)):
+                take = np.concatenate([idx, np.repeat(idx[:1],
+                                                      w_next - idx.size)])
+                fields = {f: np.array(ch[f][take])
+                          for f in _IPMCarry._fields}
+                fields["done"][idx.size:] = True
+                carry = _IPMCarry(**{f: jnp.asarray(v)
+                                     for f, v in fields.items()})
+                # the std-form buffers live in ORIGINAL row order: gather
+                # by the surviving rows' original indices, not buffer
+                # slots
+                src = orig[take]
+                cur = tuple(jnp.asarray(v[src])
+                            for v in (a_h, b_h, c_h, u_h))
+                orig = src
+                orig[idx.size:] = -1
+                width = w_next
+                it_prev = fields["it"][:]
+                it32_prev = fields["it32"][:]
         else:
             it_prev = ch["it"]
             it32_prev = ch["it32"]
@@ -894,24 +912,45 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
         if active.shape != (batch,):
             raise ValueError(f"row_active shaped {active.shape}, "
                              f"expected ({batch},)")
+    row_shape = tuple(a.shape[1:] if ax == 0 else a.shape
+                      for a, ax in zip(arrs, axes))
     if compact:
-        _STACKED_SIGNATURES.add(("compact", axes, max_iters, chunk_iters,
-                                 linsolve, newton_dtype,
-                                 tuple(a.shape for a in arrs)))
-        sol, it32, bad, compact_rows = _solve_stacked_compact(
-            arrs, axes, batch, tol, active, max_iters=max_iters,
-            chunk_iters=chunk_iters, linsolve=linsolve,
-            newton_dtype=newton_dtype)
-        _record_newton_rows(sol.iters, active, converged=sol.converged,
-                            it32=it32, bad=bad, compact_rows=compact_rows)
+        sig = ("compact", axes, max_iters, chunk_iters, linsolve,
+               newton_dtype, tuple(a.shape for a in arrs))
+        if sig not in _STACKED_SIGNATURES:
+            _STACKED_SIGNATURES.add(sig)
+            obs.record_compile("compact", width=batch, axes=axes,
+                               max_iters=max_iters, linsolve=linsolve,
+                               newton_dtype=newton_dtype, compact=True,
+                               chunk_iters=chunk_iters, row_shape=row_shape)
+        with obs.span("lp.solve_stacked", width=batch, compact=True,
+                      linsolve=linsolve, newton_dtype=newton_dtype):
+            sol, it32, bad, compact_rows = _solve_stacked_compact(
+                arrs, axes, batch, tol, active, max_iters=max_iters,
+                chunk_iters=chunk_iters, linsolve=linsolve,
+                newton_dtype=newton_dtype)
+            _record_newton_rows(sol.iters, active, converged=sol.converged,
+                                it32=it32, bad=bad,
+                                compact_rows=compact_rows)
         return sol
-    _STACKED_SIGNATURES.add((axes, max_iters, linsolve, newton_dtype,
-                             tuple(a.shape for a in arrs)))
-    sol, it32, bad = _stacked_solver(axes, max_iters, linsolve,
-                                     newton_dtype)(
-        jnp.asarray(tol, dt), active, *arrs)
-    _record_newton_rows(sol.iters, active, converged=sol.converged,
-                        it32=it32, bad=bad)
+    sig = (axes, max_iters, linsolve, newton_dtype,
+           tuple(a.shape for a in arrs))
+    if sig not in _STACKED_SIGNATURES:
+        _STACKED_SIGNATURES.add(sig)
+        obs.record_compile("stacked", width=batch, axes=axes,
+                           max_iters=max_iters, linsolve=linsolve,
+                           newton_dtype=newton_dtype, compact=False,
+                           chunk_iters=None, row_shape=row_shape)
+    # the span covers the (possibly compiling) dispatch AND the ledger
+    # record, whose np.asarray blocks on the async device result — so
+    # the measured time is real solve time, not lazy-dispatch time
+    with obs.span("lp.solve_stacked", width=batch, compact=False,
+                  linsolve=linsolve, newton_dtype=newton_dtype):
+        sol, it32, bad = _stacked_solver(axes, max_iters, linsolve,
+                                         newton_dtype)(
+            jnp.asarray(tol, dt), active, *arrs)
+        _record_newton_rows(sol.iters, active, converged=sol.converged,
+                            it32=it32, bad=bad)
     return sol
 
 
@@ -932,6 +971,40 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                             linsolve=linsolve, row_active=row_active,
                             compact=compact, chunk_iters=chunk_iters,
                             newton_dtype=newton_dtype)
+
+
+def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
+                            linsolve: str = "xla", compact: bool = False,
+                            chunk_iters=None,
+                            newton_dtype: str = "float64") -> dict:
+    """The width-independent compile-attribution config that
+    :func:`solve_node_lps_stacked` calls for ``node``-shaped stacks emit
+    (see ``obs.record_compile``): kind + axes + solver knobs + per-row
+    array shapes, WITHOUT the batch width.
+
+    Consumers pass it as the ``**match`` filter of
+    ``obs.compile_events`` to count only compiles attributable to their
+    own problem shape and solver config — e.g.
+    ``AllocationServer.recompiles_since_warmup`` additionally requires
+    the event width to be one of its ladder widths.  Deterministic, so
+    a server that warmed against an already-hot jit cache (no compile
+    events of its own) can still build its filter.
+    """
+    newton_dtype = _canon_newton_dtype(newton_dtype)
+    chunk_iters = (_CHUNK_ITERS if chunk_iters is None
+                   else int(chunk_iters)) if compact else None
+    row_shape = tuple(np.asarray(getattr(node, f)).shape
+                      for f in ("c", "a_eq", "b_eq", "g", "h", "lb", "ub"))
+    return {
+        "kind": "compact" if compact else "stacked",
+        "axes": (0,) * 7,
+        "max_iters": int(max_iters),
+        "linsolve": linsolve,
+        "newton_dtype": newton_dtype,
+        "compact": bool(compact),
+        "chunk_iters": chunk_iters,
+        "row_shape": row_shape,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -1019,11 +1092,13 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
     """
     widths = ladder_widths(ladder_max)
     for w in widths:
-        solve_node_lps_stacked([node] * w, max_iters=max_iters, tol=tol,
-                               linsolve=linsolve,
-                               row_active=np.zeros(w, dtype=bool),
-                               compact=compact, chunk_iters=chunk_iters,
-                               newton_dtype=newton_dtype)
+        with obs.span("lp.warm_width", width=w, linsolve=linsolve,
+                      compact=compact):
+            solve_node_lps_stacked([node] * w, max_iters=max_iters,
+                                   tol=tol, linsolve=linsolve,
+                                   row_active=np.zeros(w, dtype=bool),
+                                   compact=compact, chunk_iters=chunk_iters,
+                                   newton_dtype=newton_dtype)
     return widths
 
 

@@ -20,6 +20,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import pareto
 from repro.market.simulator import EpisodeResult
 
@@ -76,7 +77,7 @@ def summarise(result: EpisodeResult, *,
     dt = t1 - t0
     horizon = float(dt.sum())
     viol = mk > result.slo_latency * (1 + 1e-9)
-    return EpisodeMetrics(
+    m = EpisodeMetrics(
         result.policy, result.episode_seed, result.horizon_s,
         result.slo_latency, t0, t1, mk, cr, alive,
         accrued_cost=float((cr * dt).sum()),
@@ -88,6 +89,12 @@ def summarise(result: EpisodeResult, *,
                                 if r.replanned)),
         reset_wall_s=float(result.reset_wall_s),
         sla_penalty_rate=float(sla_penalty_rate))
+    # idempotent gauges (summarise may run several times per result,
+    # e.g. inside regret_table — gauges rewrite, they never double-count)
+    obs.gauge(f"market.{m.policy}.accrued_cost", m.accrued_cost)
+    obs.gauge(f"market.{m.policy}.slo_violation_s", m.slo_violation_s)
+    obs.gauge(f"market.{m.policy}.avg_makespan", m.avg_makespan)
+    return m
 
 
 def hypervolume_over_time(metrics: EpisodeMetrics,
@@ -126,7 +133,7 @@ def regret(policy: EpisodeMetrics, oracle: EpisodeMetrics) -> RegretReport:
         raise ValueError("episodes do not align (different event traces)")
     dt = policy.durations
     horizon = float(dt.sum())
-    return RegretReport(
+    rep = RegretReport(
         policy.policy, policy.episode_seed,
         cost_regret=policy.total_cost - oracle.total_cost,
         makespan_regret=float(((policy.makespan - oracle.makespan)
@@ -134,6 +141,10 @@ def regret(policy: EpisodeMetrics, oracle: EpisodeMetrics) -> RegretReport:
         slo_excess_s=policy.slo_violation_s - oracle.slo_violation_s,
         replans=policy.replans,
         replan_wall_s=policy.replan_wall_s)
+    obs.gauge(f"market.{rep.policy}.cost_regret", rep.cost_regret)
+    obs.gauge(f"market.{rep.policy}.makespan_regret", rep.makespan_regret)
+    obs.gauge(f"market.{rep.policy}.slo_excess_s", rep.slo_excess_s)
+    return rep
 
 
 def regret_table(results: List[EpisodeResult],

@@ -27,6 +27,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import heuristics
 from repro.core import lp as lpmod
 from repro.core.problem import AllocationProblem
@@ -281,7 +282,8 @@ def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
     fleet = Fleet.from_episode(catalog, n, episode, task_names)
     view = fleet.view(0.0, slo_latency)
     t0 = _time.perf_counter()
-    alloc = policy.reset(view)
+    with obs.span("market.reset", policy=policy.name, seed=episode.seed):
+        alloc = policy.reset(view)
     reset_wall = _time.perf_counter() - t0
     compiles_first = lpmod.stacked_compile_count()
 
@@ -302,9 +304,15 @@ def run_episode(catalog: Sequence[PlatformKind], n: np.ndarray,
         fleet.apply_event(event)
         view = fleet.view(event.time, slo_latency)
         t0 = _time.perf_counter()
-        new_alloc = policy.replan(view, event)
+        with obs.span("market.replan", policy=policy.name,
+                      event=event.kind, t=event.time) as rsp:
+            new_alloc = policy.replan(view, event)
+            replanned = new_alloc is not alloc
+            rsp.set(replanned=replanned)
         wall = _time.perf_counter() - t0
-        replanned = new_alloc is not alloc
+        obs.update(counters={"market.events": 1,
+                             "market.replans": 1 if replanned else 0},
+                   observations={"market.replan_ms": [wall * 1e3]})
         alloc = new_alloc
         t_prev, opened_by = event.time, event.kind
     close(t_prev, episode.horizon_s, replanned, wall, opened_by)

@@ -1,0 +1,80 @@
+"""repro.obs — unified telemetry: span tracing, metrics, compile
+attribution.
+
+Three zero-dependency pieces behind one import (``from repro import
+obs``):
+
+* **Spans** (:mod:`repro.obs.trace`) — ``with obs.span("lp.chunk",
+  width=64): ...`` nested monotonic-clock regions, exported as Chrome
+  trace-event JSON (Perfetto-loadable) or JSONL.  Off by default with a
+  strict no-op fast path; flip with :func:`enable` / :class:`capture`.
+* **Metrics** (:mod:`repro.obs.metrics`) — one always-on, thread-safe
+  registry of counters/gauges/histograms with :func:`scope` frame
+  semantics (the generic form of the old ``lp.newton_ledger``).
+* **Compile attribution** (:mod:`repro.obs.compile_events`) — one
+  :class:`CompileEvent` per new stacked-solver signature, so consumers
+  count *their own* recompiles instead of diffing a global counter.
+
+:func:`snapshot` merges all three into one structured view.  Full
+contract: docs/observability.md.
+"""
+from __future__ import annotations
+
+from .compile_events import (
+    CompileEvent,
+    compile_count,
+    compile_events,
+    last_seq,
+    record_compile,
+    reset_compile_events,
+)
+from .metrics import REGISTRY, MetricsRegistry
+from .trace import (
+    SpanEvent,
+    add_span,
+    capture,
+    clear_trace,
+    disable,
+    drop_events,
+    enable,
+    enabled,
+    export_chrome_trace,
+    export_jsonl,
+    span,
+    trace_events,
+)
+
+# module-level conveniences bound to the process-wide registry
+inc = REGISTRY.inc
+gauge = REGISTRY.gauge
+observe = REGISTRY.observe
+observe_many = REGISTRY.observe_many
+update = REGISTRY.update
+read_counter = REGISTRY.read_counter
+read_counters = REGISTRY.read_counters
+read_hist = REGISTRY.read_hist
+reset_metrics = REGISTRY.reset
+scope = REGISTRY.scope
+
+
+def snapshot() -> dict:
+    """One structured view of everything: registry counters / gauges /
+    histogram summaries plus the compile-event log."""
+    snap = REGISTRY.snapshot()
+    snap["compile_events"] = [
+        {"seq": ev.seq, "kind": ev.kind, **ev.config}
+        for ev in compile_events()
+    ]
+    return snap
+
+
+__all__ = [
+    "CompileEvent", "SpanEvent", "MetricsRegistry", "REGISTRY",
+    "add_span", "capture", "clear_trace", "compile_count",
+    "compile_events", "disable", "drop_events", "enable", "enabled",
+    "export_chrome_trace", "export_jsonl", "gauge", "inc", "last_seq",
+    "observe", "observe_many", "read_counter", "read_counters",
+    "read_hist", "record_compile", "reset_compile_events",
+    "reset_metrics", "scope", "snapshot", "span", "trace_events",
+    "update",
+]

@@ -1,0 +1,87 @@
+"""Compile-event attribution for the stacked-IPM jit caches.
+
+``lp.stacked_compile_count()`` is one global integer: any solver
+activity anywhere in the process bumps it, so a consumer diffing it
+(the old ``AllocationServer.recompiles_since_warmup``) mis-attributes a
+second server's warmup — or a stray bench solve — to itself, and a
+failed zero-recompile assertion says nothing about WHICH config
+compiled.
+
+This module records one :class:`CompileEvent` per new stacked
+signature, carrying a monotonically increasing ``seq``, a wall-ish
+timestamp, and the full solve config (``width``, ``linsolve``,
+``newton_dtype``, ``compact``, ``axes``, ``row_shape``...).  Consumers
+then filter: "compiles since my warmup whose config matches MY problem
+shape and knobs" — see ``AllocationServer.recompiles_since_warmup``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, NamedTuple, Optional
+
+
+class CompileEvent(NamedTuple):
+    """One newly-compiled stacked-solver signature."""
+    seq: int            # process-wide monotonic event number (1-based)
+    t_ns: int           # time.perf_counter_ns() at record time
+    kind: str           # "stacked" | "compact" | custom
+    config: dict        # width/axes/max_iters/linsolve/newton_dtype/...
+
+
+_LOCK = threading.Lock()
+_EVENTS: List[CompileEvent] = []
+_SEQ = 0
+
+
+def record_compile(kind: str = "stacked", **config) -> CompileEvent:
+    """Append a compile event (called by ``lp.solve_lp_stacked`` the
+    first time a signature is seen; tests may record synthetic events).
+    Returns the recorded event."""
+    global _SEQ
+    with _LOCK:
+        _SEQ += 1
+        ev = CompileEvent(_SEQ, time.perf_counter_ns(), kind, dict(config))
+        _EVENTS.append(ev)
+        return ev
+
+
+def last_seq() -> int:
+    """Sequence number of the most recent compile event (0 if none) —
+    the watermark consumers store at warmup."""
+    with _LOCK:
+        return _SEQ
+
+
+def compile_events(kind: Optional[str] = None, since_seq: int = 0,
+                   **match) -> List[CompileEvent]:
+    """Events after ``since_seq``, filtered by ``kind`` and by config
+    equality on every ``match`` key (keys absent from an event's config
+    never match)."""
+    with _LOCK:
+        evs = list(_EVENTS)
+    out = []
+    for ev in evs:
+        if ev.seq <= since_seq:
+            continue
+        if kind is not None and ev.kind != kind:
+            continue
+        cfg = ev.config
+        if any(k not in cfg or cfg[k] != v for k, v in match.items()):
+            continue
+        out.append(ev)
+    return out
+
+
+def compile_count(kind: Optional[str] = None, since_seq: int = 0,
+                  **match) -> int:
+    return len(compile_events(kind=kind, since_seq=since_seq, **match))
+
+
+def reset_compile_events() -> None:
+    """Testing hook: drop recorded events and reset the sequence.
+    Consumers holding an old ``last_seq`` watermark must re-anchor."""
+    global _SEQ
+    with _LOCK:
+        _EVENTS.clear()
+        _SEQ = 0

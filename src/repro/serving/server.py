@@ -46,6 +46,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import lp, pareto
 from repro.core.problem import AllocationProblem
 
@@ -82,13 +83,18 @@ class AllocRequest:
 @dataclasses.dataclass(frozen=True)
 class AllocResult:
     """What a tenant's future resolves to: its frontier plus how the
-    request was served."""
+    request was served, including where its latency went (queue wait
+    before the dispatch began, the shared stacked solve, the per-tenant
+    frontier slice)."""
     tenant: str
     frontier: pareto.TenantFrontier
     latency_s: float              # submit -> resolve wall clock
     batch_width: int              # ladder buffer width of the dispatch
     batch_rows: int               # live LP rows in the merged batch
     coalesced_tenants: int        # requests sharing the dispatch
+    queue_wait_s: float = 0.0     # submit -> dispatch start
+    solve_s: float = 0.0          # stacked-IPM wall of the dispatch
+    slice_s: float = 0.0          # tenant_frontiers wall of the dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,7 +145,13 @@ class AllocationServer:
         self._stop = False
         self.dispatches: List[DispatchRecord] = []
         self.latencies_s: List[float] = []
+        # per-request latency breakdown, parallel to latencies_s
+        self.queue_waits_s: List[float] = []
+        self.solve_s: List[float] = []
+        self.slice_s: List[float] = []
         self._compiles_after_warm: Optional[int] = None
+        self._warm_seq: Optional[int] = None
+        self._attr_match: Optional[dict] = None
         self.warmed_widths: list = []
 
     # -- compile-cache contract ----------------------------------------
@@ -155,19 +167,46 @@ class AllocationServer:
         node = pareto.frontier_nodes(
             problem, [float(problem.single_platform_cost().min())], dead)[0]
         self._lock_shape(problem)
-        self.warmed_widths = lp.warm_ladder(node, self.ladder_max,
-                                            **self._solve_kw)
+        with obs.span("serving.warmup", ladder_max=self.ladder_max):
+            self.warmed_widths = lp.warm_ladder(node, self.ladder_max,
+                                                **self._solve_kw)
         self._compiles_after_warm = lp.stacked_compile_count()
+        # deterministic attribution filter for THIS server's dispatches:
+        # problem shape + solver knobs, matched against the compile-event
+        # log from here on.  Derived from the node (not from observed
+        # warm events), so a server warming against an already-hot jit
+        # cache still gets a filter.
+        key_kw = {k: v for k, v in self._solve_kw.items() if k != "tol"}
+        self._attr_match = lp.stacked_attribution_key(node, **key_kw)
+        self._warm_seq = obs.last_seq()
         return self.warmed_widths
+
+    def attribution_key(self) -> Optional[dict]:
+        """The compile-event config filter this server counts its
+        recompiles with (None before :meth:`warmup`); see
+        :func:`repro.core.lp.stacked_attribution_key`."""
+        return None if self._attr_match is None else dict(self._attr_match)
 
     @property
     def recompiles_since_warmup(self) -> Optional[int]:
-        """Stacked-solver compiles since :meth:`warmup` (None before
-        warmup).  Zero in steady state; the benchmark and tests assert
-        it."""
-        if self._compiles_after_warm is None:
+        """Stacked-solver compiles since :meth:`warmup` ATTRIBUTABLE TO
+        THIS SERVER (None before warmup): compile events after the
+        warmup watermark whose config matches the server's problem shape
+        and solver knobs at one of its ladder widths.  Unrelated solver
+        activity in-process — another server's warmup, a solo benchmark
+        solve of a different shape — no longer inflates it.  Zero in
+        steady state; the benchmark and tests assert it.
+
+        (``obs.reset_compile_events()`` invalidates the warmup
+        watermark; re-run :meth:`warmup` after a reset.)"""
+        if self._warm_seq is None:
             return None
-        return lp.stacked_compile_count() - self._compiles_after_warm
+        match = dict(self._attr_match)
+        kind = match.pop("kind")
+        widths = set(lp.ladder_widths(self.ladder_max))
+        events = obs.compile_events(kind=kind, since_seq=self._warm_seq,
+                                    **match)
+        return sum(1 for ev in events if ev.config.get("width") in widths)
 
     def _lock_shape(self, problem: AllocationProblem) -> None:
         shape = (problem.mu, problem.tau)
@@ -233,32 +272,68 @@ class AllocationServer:
     def pump(self) -> int:
         """Drain ONE coalesced batch: admit, dispatch one stacked-IPM
         call, resolve the batch's futures.  Returns the number of
-        requests served (0 if the queue was empty)."""
+        requests served (0 if the queue was empty).
+
+        Instrumented: the dispatch emits nested ``serving.dispatch`` >
+        ``admit`` / ``solve`` / ``slice`` / ``resolve`` spans, one
+        cross-thread ``serving.request`` span per request covering its
+        whole submit→resolve lifecycle, and one atomic registry update
+        with the queue-wait / solve / slice breakdown."""
         with self._lock:
             admitted = self._admit()
         if not admitted:
             return 0
         reqs = [e[2] for e in admitted]
         submits = [e[4] for e in admitted]
-        nodes = []
-        for r in reqs:
-            nodes.extend(pareto.frontier_nodes(r.problem, r.caps, r.dead))
-        width = lp.next_ladder_width(len(nodes), self.ladder_max)
-        t0 = time.perf_counter()
-        sol = lp.solve_node_lps_ladder(nodes, ladder_max=self.ladder_max,
-                                       **self._solve_kw)
-        wall = time.perf_counter() - t0
-        fronts = pareto.tenant_frontiers([r.problem for r in reqs],
-                                         [r.caps for r in reqs], sol)
-        self.dispatches.append(DispatchRecord(len(reqs), len(nodes), width,
-                                              wall))
-        now = time.perf_counter()
-        for (_, _, req, fut, _), front, t_sub in zip(admitted, fronts,
-                                                     submits):
-            latency = now - t_sub
-            self.latencies_s.append(latency)
-            fut.set_result(AllocResult(req.tenant, front, latency, width,
-                                       len(nodes), len(reqs)))
+        with obs.span("serving.dispatch", n_requests=len(reqs)) as dsp:
+            t_admit = time.perf_counter()
+            with obs.span("serving.admit", n_requests=len(reqs)):
+                nodes = []
+                for r in reqs:
+                    nodes.extend(pareto.frontier_nodes(r.problem, r.caps,
+                                                       r.dead))
+                width = lp.next_ladder_width(len(nodes), self.ladder_max)
+            dsp.set(width=width, rows=len(nodes))
+            t0 = time.perf_counter()
+            with obs.span("serving.solve", width=width, rows=len(nodes)):
+                sol = lp.solve_node_lps_ladder(
+                    nodes, ladder_max=self.ladder_max, **self._solve_kw)
+            wall = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            with obs.span("serving.slice", tenants=len(reqs)):
+                fronts = pareto.tenant_frontiers([r.problem for r in reqs],
+                                                 [r.caps for r in reqs], sol)
+            slice_wall = time.perf_counter() - t1
+            self.dispatches.append(DispatchRecord(len(reqs), len(nodes),
+                                                  width, wall))
+            with obs.span("serving.resolve", n_requests=len(reqs)):
+                now = time.perf_counter()
+                for (_, _, req, fut, _), front, t_sub in zip(admitted,
+                                                             fronts,
+                                                             submits):
+                    latency = now - t_sub
+                    queue_wait = t_admit - t_sub
+                    self.latencies_s.append(latency)
+                    self.queue_waits_s.append(queue_wait)
+                    self.solve_s.append(wall)
+                    self.slice_s.append(slice_wall)
+                    obs.add_span("serving.request", int(t_sub * 1e9),
+                                 int(now * 1e9), tenant=req.tenant,
+                                 queue_wait_ms=queue_wait * 1e3,
+                                 solve_ms=wall * 1e3,
+                                 slice_ms=slice_wall * 1e3, width=width)
+                    fut.set_result(AllocResult(
+                        req.tenant, front, latency, width, len(nodes),
+                        len(reqs), queue_wait, wall, slice_wall))
+            obs.update(
+                counters={"serving.requests": len(reqs),
+                          "serving.dispatches": 1},
+                observations={
+                    "serving.latency_s": [now - t for t in submits],
+                    "serving.queue_wait_s": [t_admit - t for t in submits],
+                    "serving.solve_s": [wall],
+                    "serving.slice_s": [slice_wall],
+                })
         return len(reqs)
 
     def run_until_idle(self) -> int:
@@ -317,15 +392,28 @@ class AllocationServer:
 
     def stats(self) -> dict:
         """Serving statistics since construction: request latency
-        percentiles, dispatch count/occupancy and the compile-cache
-        state."""
+        percentiles with a queue-wait / solve / slice breakdown,
+        dispatch count/occupancy and the compile-cache state."""
         lat = np.asarray(self.latencies_s, dtype=np.float64)
         occ = [d.occupancy for d in self.dispatches]
+
+        def pct(vals, q):
+            a = np.asarray(vals, dtype=np.float64)
+            return float(np.percentile(a, q) * 1e3) if a.size else None
+
         return {
             "requests": int(lat.size),
             "dispatches": len(self.dispatches),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "p50_ms": pct(lat, 50),
+            "p99_ms": pct(lat, 99),
+            "breakdown": {
+                "queue_wait_p50_ms": pct(self.queue_waits_s, 50),
+                "queue_wait_p99_ms": pct(self.queue_waits_s, 99),
+                "solve_p50_ms": pct(self.solve_s, 50),
+                "solve_p99_ms": pct(self.solve_s, 99),
+                "slice_p50_ms": pct(self.slice_s, 50),
+                "slice_p99_ms": pct(self.slice_s, 99),
+            },
             "mean_occupancy": float(np.mean(occ)) if occ else None,
             "widths_used": sorted({d.width for d in self.dispatches}),
             "warmed_widths": list(self.warmed_widths),

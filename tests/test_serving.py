@@ -4,6 +4,7 @@ contract of the continuous-batching server."""
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import lp, pareto
 from repro.core.problem import AllocationProblem
 from repro.serving import AllocRequest, AllocationServer
@@ -205,6 +206,50 @@ def test_warmup_cold_start_bounded_by_widths():
     assert lp.stacked_compile_count() == again
 
 
+def test_recompiles_attributed_per_config_not_global():
+    """`recompiles_since_warmup` counts only compile events matching
+    THIS server's problem shape, solver knobs and ladder widths.
+    Unrelated in-process solver activity — a different-shape solo
+    solve, another server's warmup — used to inflate the old global
+    counter diff; it must read 0 now."""
+    p = _problem(15)
+    srv = AllocationServer(ladder_max=8)
+    srv.warmup(p)
+    assert srv.recompiles_since_warmup == 0
+    assert srv.attribution_key()["row_shape"] == \
+        lp.stacked_attribution_key(
+            pareto.frontier_nodes(p, _caps(p, 1))[0])["row_shape"]
+
+    # (a) a different-shape solo stacked solve at one of srv's ladder
+    # widths compiles a NEW signature globally but is not srv's
+    other = _problem(16, mu=5, tau=4)
+    global_before = lp.stacked_compile_count()
+    lp.solve_node_lps_stacked(pareto.frontier_nodes(other, _caps(other, 4)))
+    assert lp.stacked_compile_count() > global_before   # really compiled
+    assert srv.recompiles_since_warmup == 0             # not attributed
+
+    # (b) a second server on that other shape warms its own ladder:
+    # its compiles are its own, srv still reads 0
+    srv2 = AllocationServer(ladder_max=4)
+    srv2.warmup(other)
+    assert srv.recompiles_since_warmup == 0
+    assert srv2.recompiles_since_warmup == 0
+
+    # (c) same knobs but a non-ladder width is not a serving dispatch
+    key = srv.attribution_key()
+    kind = key.pop("kind")
+    obs.record_compile(kind, width=5, **key)
+    assert srv.recompiles_since_warmup == 0
+
+    # (d) a genuinely matching event at a ladder width IS counted
+    obs.record_compile(kind, width=8, **key)
+    assert srv.recompiles_since_warmup == 1
+
+    # real dispatches after all this still resolve fine
+    res = srv.request(AllocRequest("t", p, _caps(p, 3)))
+    assert res.frontier.makespans.shape == (3,)
+
+
 def test_admission_respects_priority_and_ladder():
     """Low-priority (background) requests queue behind live traffic and
     ride along only in spare ladder capacity."""
@@ -263,6 +308,44 @@ def test_threaded_server_serves_concurrent_tenants():
     assert all(r.frontier.makespans.shape == (1 + i % 4,)
                for i, r in results.items())
     assert lp.stacked_compile_count() == baseline
+
+
+def test_newton_ledger_no_lost_updates_under_scheduler_thread():
+    """The Newton-row ledger is written from the scheduler thread while
+    the main thread solves too; the registry-backed ledger must count
+    every stacked call exactly once (the old module-dict version lost
+    concurrent increments)."""
+    p = _problem(14)
+    srv = AllocationServer(ladder_max=16)
+    srv.warmup(p)
+    import threading
+    n_tenants, n_main_solves = 8, 4
+    solo_nodes = pareto.frontier_nodes(p, _caps(p, 2))
+
+    def tenant(i):
+        srv.submit(AllocRequest(f"t{i}", p,
+                                _caps(p, 1 + i % 4))).result(timeout=60)
+
+    with lp.newton_ledger() as led:
+        disp_before = len(srv.dispatches)
+        with srv:
+            threads = [threading.Thread(target=tenant, args=(i,))
+                       for i in range(n_tenants)]
+            for t in threads:
+                t.start()
+            # main thread races its own stacked solves against the
+            # scheduler's dispatches
+            for _ in range(n_main_solves):
+                lp.solve_node_lps_stacked(solo_nodes)
+            for t in threads:
+                t.join()
+        dispatches = len(srv.dispatches) - disp_before
+    assert led["calls"] == dispatches + n_main_solves
+    assert led["active_rows"] > 0
+    # the per-request breakdown survived the threaded path too
+    st = srv.stats()
+    assert st["breakdown"]["queue_wait_p99_ms"] is not None
+    assert st["breakdown"]["solve_p50_ms"] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ import numpy as np
 from benchmarks.common import experiment_problem, seeded, smoke_scaled
 from repro.core import milp, pareto
 from repro.market import events as mev
+from repro.market import fused as mfused
 from repro.market import metrics as mmetrics
 from repro.market import simulator as msim
 from repro.market.policies import (FrontierLookupPolicy, OraclePolicy,
@@ -207,6 +208,102 @@ def run() -> list:
                  wall_compact * 1e6 / len(views),
                  f"vs_batched="
                  f"{wall_batched / max(wall_compact, 1e-12):.2f}x"))
+    rows += run_fused()
+    return rows
+
+
+def run_fused() -> list:
+    """Fused-episode rows only (no MILP policies, no oracle): scan-vs-
+    loop parity and the vmapped Monte-Carlo throughput + distributional
+    regret.  Split out so ``benchmarks.run`` can include them in the
+    gated ``BENCH_solver.json`` trajectory without paying for the full
+    regret table above."""
+    rows = []
+    fitted, catalog, episodes = _setup()
+    n = fitted.n
+    episode = episodes[0]
+    slo, _ = _slo_for(catalog, n, episode)
+
+    # -- fused whole-episode replay vs the Python event loop -------------
+    # one lax.scan device program per episode (repro.market.fused); the
+    # Python loop is the parity oracle and the totals must agree to 1e-8
+    # relative on the seeded trace (asserted — CI fails on divergence)
+    def _rel(a, b):
+        return abs(a - b) / max(abs(a), abs(b), 1e-12)
+
+    pol = ResplitPolicy()
+    loop_res = msim.run_episode(catalog, n, episode, pol, slo_latency=slo)
+    loop_m = mmetrics.summarise(loop_res)
+    fleet0 = msim.Fleet.from_episode(catalog, n, episode)
+    alloc0 = pol.reset(fleet0.view(0.0, slo))
+    fused_t = mfused.run_episode_fused(
+        catalog, n, episode, policy_kind="resplit", slo_latency=slo,
+        alloc0=alloc0)
+    parity = max(_rel(fused_t.accrued_cost, loop_m.accrued_cost),
+                 _rel(fused_t.avg_makespan, loop_m.avg_makespan),
+                 _rel(fused_t.slo_violation_s, loop_m.slo_violation_s))
+    assert parity <= 1e-8 and fused_t.replans == loop_m.replans, (
+        f"fused episode diverged from the Python loop: rel={parity:.2e}, "
+        f"replans {fused_t.replans} vs {loop_m.replans}")
+    t0 = time.perf_counter()
+    for _ in range(3):
+        msim.run_episode(catalog, n, episode, pol, slo_latency=slo)
+    wall_loop = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    for _ in range(3):
+        mfused.run_episode_fused(catalog, n, episode,
+                                 policy_kind="resplit", slo_latency=slo,
+                                 alloc0=alloc0)
+    wall_fused = (time.perf_counter() - t0) / 3
+    rows.append(("market.episode.fused_vs_loop", wall_fused * 1e6,
+                 f"speedup={wall_loop / max(wall_fused, 1e-12):.2f}x;"
+                 f"parity_rel={parity:.2e};parity_1e-8=True;"
+                 f"replans={fused_t.replans};"
+                 f"events={len(episode.events)}"))
+
+    # -- vmapped Monte-Carlo suite + distributional regret ---------------
+    # >= 256 sampled traces per policy in ONE compiled call each; regret
+    # per trace is against the pointwise-best policy, summarised as
+    # CVaR/quantile bands (the paper's trade-off claim, distributionally)
+    n_mc = smoke_scaled(256, 32)
+    mc_eps = [mev.generate_episode([k.name for k in catalog],
+                                   seed=seeded(10_000) + i,
+                                   horizon_s=3600.0,
+                                   n_initial=min(3, len(catalog)),
+                                   max_platforms=smoke_scaled(8, 6))
+              for i in range(n_mc)]
+    tensors = mev.stack_event_tensors(mc_eps)
+    # cheap per-trace SLO anchor (the LP-anchored slo_for_episode would
+    # cost one solve per trace — overkill for a throughput row)
+    slos, alloc0s = [], []
+    seeder = ResplitPolicy()               # cheap heuristic t=0 plans —
+    for ep in mc_eps:                      # a MILP reset x256 would turn
+        fl = msim.Fleet.from_episode(catalog, n, ep)   # this throughput
+        lat = fl.problem().single_platform_latency()   # row into a MILP
+        s = float(lat[~fl.dead].min()) * 0.8           # benchmark
+        slos.append(s)
+        alloc0s.append(seeder.reset(fl.view(0.0, s)))
+    suites = {}
+    mc_wall = {}
+    for kind, pname in (("static", "static_heuristic"),
+                        ("resplit", "resplit")):
+        t0 = time.perf_counter()
+        suites[pname] = mfused.run_episodes_vmapped(
+            catalog, n, mc_eps, policy_kind=kind, slo_latencies=slos,
+            alloc0s=alloc0s, tensors=tensors, policy_name=pname)
+        mc_wall[pname] = time.perf_counter() - t0
+    dist = mmetrics.distributional_regret_from_totals(suites)
+    total_wall = sum(mc_wall.values())
+    rows.append(("market.episodes.vmap_throughput",
+                 total_wall * 1e6 / (n_mc * len(suites)),
+                 f"episodes={n_mc};policies={len(suites)};"
+                 f"episodes_per_s="
+                 f"{n_mc * len(suites) / max(total_wall, 1e-12):.0f}"))
+    for name, d in dist.items():
+        rows.append((f"market.regret_dist.{name}", 0.0,
+                     f"mean={d.mean:.4f};p50={d.p50:.4f};p90={d.p90:.4f};"
+                     f"p95={d.p95:.4f};cvar95={d.cvar95:.4f};"
+                     f"worst={d.worst:.4f};traces={d.n_traces}"))
     return rows
 
 

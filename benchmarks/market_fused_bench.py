@@ -1,0 +1,18 @@
+"""Fused-episode benchmark rows for the gated trajectory.
+
+A thin registration shim: ``benchmarks.run`` deliberately excludes the
+full spot-market benchmark (MILP policies + clairvoyant oracle make it
+the slowest suite), but the fused ``lax.scan`` replay rows are cheap —
+heuristic plans plus one compiled program per policy — and belong in
+the committed ``BENCH_solver.json`` trajectory so
+``benchmarks/compare.py`` gates them like every solver row.  The rows
+themselves live in :func:`benchmarks.market_bench.run_fused` (one
+source of truth; ``market_bench`` standalone emits them too).
+"""
+from __future__ import annotations
+
+from benchmarks import market_bench
+
+
+def run() -> list:
+    return market_bench.run_fused()

@@ -47,15 +47,17 @@ def main() -> None:
     if args.seed is not None:
         os.environ["REPRO_BENCH_SEED"] = str(args.seed)
 
-    # The spot-market policy benchmark and the serving benchmark are NOT
-    # in this list: each is its own CLI (``python -m
+    # The FULL spot-market policy benchmark and the serving benchmark are
+    # NOT in this list: each is its own CLI (``python -m
     # benchmarks.market_bench`` / ``benchmarks.serving_bench``) with the
     # same --smoke/--seed/--out flags, run as a separate CI step so its
-    # CSV lands in its own artifact instead of double-running here.
+    # CSV lands in its own artifact instead of double-running here.  The
+    # fused-episode subset (market_fused_bench) IS included: its rows are
+    # cheap and belong in the gated BENCH_solver.json trajectory.
     from benchmarks import (fig2_latency_error, fig3_pareto,
-                            mc_kernel_bench, obs_bench, solver_bench,
-                            table2_platforms, table3_cost_model,
-                            table4_tradeoff)
+                            market_fused_bench, mc_kernel_bench,
+                            obs_bench, solver_bench, table2_platforms,
+                            table3_cost_model, table4_tradeoff)
     from repro import obs
     modules = [
         ("table2", table2_platforms),
@@ -66,6 +68,7 @@ def main() -> None:
         ("solver", solver_bench),
         ("mc_kernel", mc_kernel_bench),
         ("obs", obs_bench),
+        ("market_fused", market_fused_bench),
     ]
     if args.profile_dir:
         import jax

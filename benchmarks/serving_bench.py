@@ -81,7 +81,7 @@ def run() -> list:
     n_tenants = smoke_scaled(8, 4)
     served = 0
     t0 = time.perf_counter()
-    lat_mark = len(srv.latencies_s)
+    lat_mark = srv.total_requests
     for _ in range(n_waves):
         sweeps = _tenant_sweeps(fitted, n_tenants, rng)
         for i, caps in enumerate(sweeps):
@@ -89,7 +89,10 @@ def run() -> list:
                                     priority=int(rng.integers(0, 3))))
         served += srv.run_until_idle()
     wall = time.perf_counter() - t0
-    lat = np.asarray(srv.latencies_s[lat_mark:]) * 1e6       # us
+    # latencies_s is a bounded deque; take this phase's tail (the phase
+    # fits inside the window for every bench size)
+    n_phase = min(srv.total_requests - lat_mark, len(srv.latencies_s))
+    lat = np.asarray(list(srv.latencies_s)[-n_phase:]) * 1e6  # us
     p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
     rps = served / wall
     occ = np.mean([d.occupancy for d in srv.dispatches])

@@ -185,6 +185,57 @@ def run() -> list:
                  f"fallback_rows={led32['fallback_rows']};"
                  f"rel_obj_diff_vs_f64={rel32:.2e}"))
 
+    # -- device-side vs host-side between-chunk compaction on the same
+    # fixture.  compact_mode="device" keeps the whole batch resident and
+    # reorders survivors with an in-jit argsort+gather (2 scalars to the
+    # host per chunk); compact_mode="host" is the legacy NumPy
+    # gather/scatter parity oracle.  Repeated device calls must hit the
+    # warmed caches: recompile_delta is asserted into the row.
+    host = lp.solve_lp_stacked(*stack, compact=True, compact_mode="host")
+    dev_host_diff = float(np.abs(np.asarray(comp.obj)[conv]
+                                 - np.asarray(host.obj)[conv]).max())
+    count_warm = lp.stacked_compile_count()
+    us_dev = timeit(lambda: np.asarray(
+        lp.solve_lp_stacked(*stack, compact=True,
+                            compact_mode="device").x),
+        repeats=3, warmup=0)
+    us_host2 = timeit(lambda: np.asarray(
+        lp.solve_lp_stacked(*stack, compact=True,
+                            compact_mode="host").x), repeats=3, warmup=0)
+    recompile_delta = lp.stacked_compile_count() - count_warm
+    rows.append((f"solver.device_compact.{n_rows}rows", us_dev,
+                 f"speedup_vs_host={us_host2 / max(us_dev, 1e-9):.2f}x;"
+                 f"device_ge_host={us_dev <= us_host2};"
+                 f"max_obj_diff_vs_host={dev_host_diff:.2e};"
+                 f"recompile_delta={recompile_delta}"))
+
+    # the narrow-sweep regression fixture: WarmMILPPolicy-shaped batches
+    # (n_caps~5 rows) spend so little per chunk that the host path's
+    # between-chunk NumPy round-trips dominated — the device path must
+    # be at least as fast here, not just at wide batches
+    narrow_idx = [0, 1, 2, 3, n_rows - 1]          # 4 easy + 1 straggler
+    stack5 = [arr[narrow_idx] for arr in stack]
+    d5 = lp.solve_lp_stacked(*stack5, compact=True,
+                             compact_mode="device")           # warm
+    h5 = lp.solve_lp_stacked(*stack5, compact=True,
+                             compact_mode="host")             # warm
+    conv5 = np.asarray(d5.converged) & np.asarray(h5.converged)
+    diff5 = float(np.abs(np.asarray(d5.obj)[conv5]
+                         - np.asarray(h5.obj)[conv5]).max())
+    count5 = lp.stacked_compile_count()
+    us_dev5 = timeit(lambda: np.asarray(
+        lp.solve_lp_stacked(*stack5, compact=True,
+                            compact_mode="device").x),
+        repeats=5, warmup=0)
+    us_host5 = timeit(lambda: np.asarray(
+        lp.solve_lp_stacked(*stack5, compact=True,
+                            compact_mode="host").x), repeats=5, warmup=0)
+    rows.append(("solver.device_compact.narrow_sweep.5rows", us_dev5,
+                 f"speedup_vs_host={us_host5 / max(us_dev5, 1e-9):.2f}x;"
+                 f"device_ge_host={us_dev5 <= us_host5};"
+                 f"max_obj_diff_vs_host={diff5:.2e};"
+                 f"recompile_delta={lp.stacked_compile_count() - count5}"))
+
     # chunked end-to-end frontier: per-budget costs must match the
     # monolithic driver (the acceptance bar is <= 1e-6)
     t_cmp = pareto.milp_tradeoff_batched(fittedp, n_points=n_points,

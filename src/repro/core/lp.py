@@ -22,6 +22,11 @@ Two stacked execution drivers share the same per-iteration math:
   smallest buffer of a fixed power-of-two width ladder, so late trips
   are paid only by the stragglers.  Every ladder width is pre-compiled
   on first use, keeping :func:`stacked_compile_count` flat thereafter.
+  ``compact_mode="device"`` (default) performs the between-chunk gather
+  INSIDE the compiled program (stable argsort+gather; only two scalars
+  per chunk cross the host boundary) and returns device arrays in input
+  row order; ``compact_mode="host"`` keeps the legacy NumPy round-trip
+  as a parity oracle.
 
 Orthogonally, ``newton_dtype="float32"`` switches the Newton
 normal-equation solves to a mixed-precision path: factor/solve in
@@ -41,6 +46,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -681,24 +687,101 @@ def _chunk_init():
     return _registered_jit(("chunk-init",), build)
 
 
+def _chunk_step_one(chunk_iters: int, max_iters: int, linsolve: str,
+                    newton_dtype: str):
+    """One row's chunk step: advance by up to ``chunk_iters`` further IPM
+    iterations (capped at the row's own ``it + chunk_iters`` and globally
+    at ``max_iters``) and report the end-of-chunk residuals.  Shared by
+    the host-compaction stepper and the fused device-side merge step so
+    both compaction modes run the exact same row math."""
+    def step_one(tol, a, b, c, u, carry):
+        _, make_body, report = _ipm_ops(a, b, c, u, tol, linsolve)
+        cap = jnp.minimum(carry.it + chunk_iters, max_iters)
+        out = _run_ipm(carry, make_body, cap, newton_dtype)
+        rp, rd, mu = report(out)
+        return out, rp, rd, mu
+
+    return step_one
+
+
 def _chunk_stepper(chunk_iters: int, max_iters: int, linsolve: str,
                    newton_dtype: str):
-    """Vmapped chunk step: advance every active row by up to
-    ``chunk_iters`` further IPM iterations (each row capped at its own
-    ``it + chunk_iters`` and globally at ``max_iters``) and report the
-    end-of-chunk residuals."""
+    """Vmapped chunk step over a whole buffer (host-compaction mode)."""
     def build():
-        def step_one(tol, a, b, c, u, carry):
-            _, make_body, report = _ipm_ops(a, b, c, u, tol, linsolve)
-            cap = jnp.minimum(carry.it + chunk_iters, max_iters)
-            out = _run_ipm(carry, make_body, cap, newton_dtype)
-            rp, rd, mu = report(out)
-            return out, rp, rd, mu
-
+        step_one = _chunk_step_one(chunk_iters, max_iters, linsolve,
+                                   newton_dtype)
         return jax.jit(jax.vmap(step_one, in_axes=(None, 0, 0, 0, 0, 0)))
 
     return _registered_jit(("chunk-step", chunk_iters, max_iters, linsolve,
                             newton_dtype), build)
+
+
+def _chunk_merge_stepper(width: int, chunk_iters: int, max_iters: int,
+                         linsolve: str, newton_dtype: str):
+    """Fused per-width device program for in-jit compaction: gather the
+    ``width``-row alive prefix of the full-batch buffers, step it, write
+    it back, and compact — a stable argsort over the whole buffer moves
+    the still-alive rows to the front and carries the slot→original-row
+    permutation along.  Everything (carry, residuals, permutation) stays
+    on device in strong dtypes; only TWO scalars (alive count, lockstep
+    trip count) ever reach the host per chunk, so the ladder's
+    width-selection control flow costs one tiny transfer instead of the
+    legacy full-carry round-trip."""
+    step_one = _chunk_step_one(chunk_iters, max_iters, linsolve,
+                               newton_dtype)
+
+    def build():
+        def merge(tol, a_f, b_f, c_f, u_f, carry, rp_f, rd_f, mu_f, perm):
+            idx = perm[:width]
+            prev = jax.tree.map(lambda f: f[:width], carry)
+            it_prev, it32_prev = prev.it, prev.it32
+            out, rp_w, rd_w, mu_w = jax.vmap(
+                step_one, in_axes=(None, 0, 0, 0, 0, 0))(
+                tol, a_f[idx], b_f[idx], c_f[idx], u_f[idx], prev)
+            carry = jax.tree.map(lambda f, pre: f.at[:width].set(pre),
+                                 carry, out)
+            rp_f = rp_f.at[:width].set(rp_w)
+            rd_f = rd_f.at[:width].set(rd_w)
+            mu_f = mu_f.at[:width].set(mu_w)
+            # a mixed-precision chunk serialises an f32 phase and an f64
+            # phase: the lockstep trips actually executed are the max f32
+            # advance PLUS the max f64 advance over the prefix
+            d32 = out.it32 - it32_prev
+            d64 = (out.it - out.it32) - (it_prev - it32_prev)
+            trips = (jnp.maximum(jnp.max(d32), 0)
+                     + jnp.maximum(jnp.max(d64), 0))
+            alive_w = (~out.done) & (out.it < max_iters)
+            n_alive = jnp.sum(alive_w.astype(jnp.int32))
+            batch = perm.shape[0]
+            alive_f = jnp.zeros((batch,), bool).at[:width].set(alive_w)
+            order = jnp.argsort(~alive_f, stable=True)
+            carry = jax.tree.map(lambda f: f[order], carry)
+            return (carry, rp_f[order], rd_f[order], mu_f[order],
+                    perm[order], n_alive, trips)
+
+        return jax.jit(merge)
+
+    return _registered_jit(("chunk-merge", width, chunk_iters, max_iters,
+                            linsolve, newton_dtype), build)
+
+
+def _chunk_finalize(n_orig: int):
+    """On-device epilogue of the device-compacted driver: invert the
+    slot→row permutation and un-standardise, so the caller receives
+    device arrays already restored to the INPUT row order (no host
+    scatter, no NumPy round-trip)."""
+    def build():
+        def fin(carry, rp, rd, mu, perm, c0, lb, csc, rsc):
+            inv = jnp.argsort(perm)
+            xo = (carry.x[inv][:, :n_orig] * csc[:, :n_orig]) + lb
+            obj = (xo @ c0 if c0.ndim == 1
+                   else jnp.einsum("bn,bn->b", c0, xo))
+            return (xo, obj, carry.y[inv] * rsc, carry.it[inv], rp[inv],
+                    rd[inv], mu[inv], carry.it32[inv], carry.bad[inv])
+
+        return jax.jit(fin)
+
+    return _registered_jit(("chunk-finalize", n_orig), build)
 
 
 # (row shapes, chunk config, widths) ladders already pre-compiled
@@ -723,7 +806,7 @@ def _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn, step_fn,
 
 def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
                            max_iters: int, chunk_iters: int, linsolve: str,
-                           newton_dtype: str):
+                           newton_dtype: str, compact_mode: str = "device"):
     """The chunked stacked driver (``compact=True``).
 
     Newton steps run in chunks of ``chunk_iters``; between chunks the
@@ -732,7 +815,14 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     while-loop trips are paid only by the stragglers.  Row math is
     identical to the monolithic driver (vmapped rows are independent and
     chunk boundaries do not change the iteration), and the output is
-    scattered back to the ORIGINAL row order.
+    restored to the ORIGINAL row order.
+
+    ``compact_mode`` picks where the between-chunk gather runs:
+    ``"device"`` (default) keeps carry/residual/permutation state on
+    device and compacts with an in-jit stable argsort+gather — one
+    two-scalar transfer per chunk; ``"host"`` is the legacy path that
+    round-trips the whole carry through NumPy between chunks (useful as
+    a parity oracle and on hosts where tiny transfers are cheap).
 
     Returns ``(LPSolution, it32, bad, compact_rows)`` with batch-ordered
     fields; ``compact_rows`` is the Newton-row cost actually paid
@@ -743,14 +833,20 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     n_orig = arrs[0].shape[-1]
     widths = _ladder_widths(batch)
     init_fn = _chunk_init()
-    step_fn = _chunk_stepper(chunk_iters, max_iters, linsolve, newton_dtype)
     tol_dev = jnp.asarray(tol, dt)
+    if compact_mode == "device":
+        return _compact_device(
+            arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths, init_fn,
+            tol_dev, active, max_iters=max_iters, chunk_iters=chunk_iters,
+            linsolve=linsolve, newton_dtype=newton_dtype)
+    step_fn = _chunk_stepper(chunk_iters, max_iters, linsolve, newton_dtype)
 
     a_h, b_h, c_h, u_h = (np.asarray(v) for v in (a, b, c, u))
-    warm_key = (a_h.shape[1:], chunk_iters, max_iters, linsolve,
+    warm_key = ("host", a_h.shape[1:], chunk_iters, max_iters, linsolve,
                 newton_dtype, tuple(widths))
     if warm_key not in _WARMED_LADDERS:
-        with obs.span("lp.warm_compact_ladder", widths=tuple(widths)):
+        with obs.span("lp.warm_compact_ladder", widths=tuple(widths),
+                      mode="host"):
             _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn,
                                  step_fn, tol_dev)
         _WARMED_LADDERS.add(warm_key)
@@ -842,12 +938,79 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     return sol, out["it32"], out["bad"], compact_rows
 
 
+def _compact_device(arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths,
+                    init_fn, tol_dev, active, *, max_iters: int,
+                    chunk_iters: int, linsolve: str, newton_dtype: str):
+    """Device-side compaction: the full-batch standard-form buffers stay
+    resident on device in ORIGINAL row order and the carry lives at full
+    width, permuted alive-rows-first.  Each chunk runs ONE fused compiled
+    program per ladder width (gather prefix → step → write back → stable
+    argsort+gather compact); the host only reads two scalars per chunk to
+    pick the next width, and a jitted epilogue inverts the permutation so
+    the returned :class:`LPSolution` holds device arrays already in input
+    row order.  All carried state uses strong dtypes — the ROADMAP's
+    named pitfall — so :func:`stacked_compile_count` stays flat after the
+    first (warmed) call."""
+    merge_fns = {w: _chunk_merge_stepper(w, chunk_iters, max_iters,
+                                         linsolve, newton_dtype)
+                 for w in widths}
+    fin_fn = _chunk_finalize(n_orig)
+    zeros = jnp.zeros((batch,), jnp.float64)
+    perm0 = jnp.arange(batch, dtype=jnp.int32)
+
+    warm_key = ("device", tuple(a.shape[1:]), chunk_iters, max_iters,
+                linsolve, newton_dtype, tuple(widths))
+    if warm_key not in _WARMED_LADDERS:
+        # all-retired warm call per width: zero while-loop trips, so each
+        # costs one compile + microseconds; after the FIRST device-
+        # compacted call the compile count is final
+        with obs.span("lp.warm_compact_ladder", widths=tuple(widths),
+                      mode="device"):
+            cold = init_fn(a, b, c, u, jnp.zeros((batch,), dtype=bool))
+            for w in widths:
+                merge_fns[w](tol_dev, a, b, c, u, cold, zeros, zeros,
+                             zeros, perm0)
+            fin_fn(cold, zeros, zeros, zeros, perm0, arrs[0], lb, csc, rsc)
+        _WARMED_LADDERS.add(warm_key)
+
+    carry = init_fn(a, b, c, u, jnp.asarray(active, dtype=bool))
+    rp = rd = mu = zeros
+    perm = perm0
+    width = batch
+    compact_rows = 0
+    # every chunk advances every active row by >= 1 iteration, so
+    # max_iters chunks always suffice; +2 pads the all-retired first call
+    for _ in range(max_iters + 2):
+        with obs.span("lp.chunk", width=width, mode="device"):
+            carry, rp, rd, mu, perm, n_alive, trips = merge_fns[width](
+                tol_dev, a, b, c, u, carry, rp, rd, mu, perm)
+            # the ONLY per-chunk host transfer: two scalars
+            n_alive, trips = (int(v) for v in
+                              jax.device_get((n_alive, trips)))
+        compact_rows += width * trips
+        if n_alive == 0:
+            break
+        w_next = _next_width(n_alive, widths)
+        if w_next < width:
+            # the gather itself already ran inside the fused chunk; emit
+            # a zero-length marker span so trace consumers still see the
+            # ladder descent
+            t_ns = time.perf_counter_ns()
+            obs.add_span("lp.compact_gather", t_ns, t_ns, from_width=width,
+                         to_width=w_next, survivors=n_alive, mode="device")
+        width = w_next
+    xo, obj, yo, it, rp, rd, mu, it32, bad = fin_fn(
+        carry, rp, rd, mu, perm, arrs[0], lb, csc, rsc)
+    sol = LPSolution(xo, obj, yo, it, rp, rd, mu)
+    return sol, it32, bad, compact_rows
+
+
 def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
                      *, max_iters: int = _MAX_ITERS,
                      tol: float = _TOL, linsolve: str = "xla",
                      row_active=None, compact: bool = False,
-                     chunk_iters=None, newton_dtype: str = "float64"
-                     ) -> LPSolution:
+                     chunk_iters=None, newton_dtype: str = "float64",
+                     compact_mode: str = "device") -> LPSolution:
     """Solve a whole stack of LPs as ONE jitted, vmapped interior-point call.
 
     Any of the seven arrays may carry a leading batch dimension (detected
@@ -879,6 +1042,13 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     level and re-converge within ~1e-8 of the monolithic answer.  Every
     ladder width is pre-compiled on first use, so
     :func:`stacked_compile_count` stays flat afterwards.
+
+    ``compact_mode`` selects where the between-chunk gather runs:
+    ``"device"`` (default) compacts inside the compiled program (stable
+    argsort+gather; two scalars per chunk cross to the host; returned
+    arrays are device-resident in input row order), ``"host"`` keeps the
+    legacy NumPy round-trip (parity oracle; see docs/solver.md for the
+    trade-off).
 
     ``newton_dtype="float32"`` enables the mixed-precision Newton path:
     float32 factor/solve plus one float64 iterative-refinement step per
@@ -915,20 +1085,25 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     row_shape = tuple(a.shape[1:] if ax == 0 else a.shape
                       for a, ax in zip(arrs, axes))
     if compact:
-        sig = ("compact", axes, max_iters, chunk_iters, linsolve,
-               newton_dtype, tuple(a.shape for a in arrs))
+        if compact_mode not in ("device", "host"):
+            raise ValueError(f"unknown compact_mode {compact_mode!r}; "
+                             f"expected 'device' or 'host'")
+        sig = ("compact", compact_mode, axes, max_iters, chunk_iters,
+               linsolve, newton_dtype, tuple(a.shape for a in arrs))
         if sig not in _STACKED_SIGNATURES:
             _STACKED_SIGNATURES.add(sig)
             obs.record_compile("compact", width=batch, axes=axes,
                                max_iters=max_iters, linsolve=linsolve,
                                newton_dtype=newton_dtype, compact=True,
-                               chunk_iters=chunk_iters, row_shape=row_shape)
+                               chunk_iters=chunk_iters, row_shape=row_shape,
+                               compact_mode=compact_mode)
         with obs.span("lp.solve_stacked", width=batch, compact=True,
-                      linsolve=linsolve, newton_dtype=newton_dtype):
+                      linsolve=linsolve, newton_dtype=newton_dtype,
+                      compact_mode=compact_mode):
             sol, it32, bad, compact_rows = _solve_stacked_compact(
                 arrs, axes, batch, tol, active, max_iters=max_iters,
                 chunk_iters=chunk_iters, linsolve=linsolve,
-                newton_dtype=newton_dtype)
+                newton_dtype=newton_dtype, compact_mode=compact_mode)
             _record_newton_rows(sol.iters, active, converged=sol.converged,
                                 it32=it32, bad=bad,
                                 compact_rows=compact_rows)
@@ -957,8 +1132,8 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
 def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                            tol: float = _TOL, linsolve: str = "xla",
                            row_active=None, compact: bool = False,
-                           chunk_iters=None, newton_dtype: str = "float64"
-                           ) -> LPSolution:
+                           chunk_iters=None, newton_dtype: str = "float64",
+                           compact_mode: str = "device") -> LPSolution:
     """Stack a sequence of same-shape :class:`~repro.core.problem.NodeLP`
     relaxations (e.g. one per scenario x budget point) and solve them in a
     single batched IPM call."""
@@ -970,7 +1145,8 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
     return solve_lp_stacked(*stacked, max_iters=max_iters, tol=tol,
                             linsolve=linsolve, row_active=row_active,
                             compact=compact, chunk_iters=chunk_iters,
-                            newton_dtype=newton_dtype)
+                            newton_dtype=newton_dtype,
+                            compact_mode=compact_mode)
 
 
 def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
@@ -1041,8 +1217,8 @@ def next_ladder_width(n_rows: int, ladder_max: int) -> int:
 def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
                           max_iters: int = _MAX_ITERS, tol: float = _TOL,
                           linsolve: str = "xla", compact: bool = False,
-                          chunk_iters=None, newton_dtype: str = "float64"
-                          ) -> LPSolution:
+                          chunk_iters=None, newton_dtype: str = "float64",
+                          compact_mode: str = "device") -> LPSolution:
     """Batch-merge entry point: solve up to ``ladder_max`` same-shape
     node LPs as ONE stacked call padded to a ladder width.
 
@@ -1071,14 +1247,18 @@ def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
     sol = solve_node_lps_stacked(padded, max_iters=max_iters, tol=tol,
                                  linsolve=linsolve, row_active=active,
                                  compact=compact, chunk_iters=chunk_iters,
-                                 newton_dtype=newton_dtype)
+                                 newton_dtype=newton_dtype,
+                                 compact_mode=compact_mode)
+    # slice, don't round-trip: the fields stay device arrays so callers
+    # (the serving slice path) never pay a hidden NumPy transfer here
     return LPSolution(*(f[:k] for f in sol))
 
 
 def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
                 tol: float = _TOL, linsolve: str = "xla",
                 compact: bool = False, chunk_iters=None,
-                newton_dtype: str = "float64") -> list:
+                newton_dtype: str = "float64",
+                compact_mode: str = "device") -> list:
     """AOT-warm every ladder width for one node-LP shape: one
     ALL-RETIRED call per width (every row starts with its ``done`` flag
     set, so the while-loop trip count is zero and each call costs one
@@ -1098,7 +1278,8 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
                                    tol=tol, linsolve=linsolve,
                                    row_active=np.zeros(w, dtype=bool),
                                    compact=compact, chunk_iters=chunk_iters,
-                                   newton_dtype=newton_dtype)
+                                   newton_dtype=newton_dtype,
+                                   compact_mode=compact_mode)
     return widths
 
 
@@ -1107,11 +1288,13 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
 def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
                      *, max_iters: int = _MAX_ITERS, linsolve: str = "xla",
                      compact: bool = False, chunk_iters=None,
-                     newton_dtype: str = "float64"):
+                     newton_dtype: str = "float64",
+                     compact_mode: str = "device"):
     return solve_lp_stacked(c, a_eq, b_eq, g, h_batch, lb, ub,
                             max_iters=max_iters, linsolve=linsolve,
                             compact=compact, chunk_iters=chunk_iters,
-                            newton_dtype=newton_dtype)
+                            newton_dtype=newton_dtype,
+                            compact_mode=compact_mode)
 
 
 def scipy_reference_lp(c, a_eq, b_eq, g, h, lb, ub):

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+import jax
 import numpy as np
 
 from repro.core import heuristics, milp
@@ -283,9 +284,11 @@ def tenant_frontiers(problems, caps_list, sol) -> List[TenantFrontier]:
     returns (to the last ulp for numerically stable rows, <= 1e-8 for
     ill-conditioned stragglers under the chunked driver).
     """
-    xs = np.asarray(sol.x)
-    objs = np.asarray(sol.obj)
-    conv = np.asarray(sol.converged)
+    # one transfer for all three fields: sol may hold device arrays (the
+    # device-compacted chunked driver returns them), and three separate
+    # np.asarray calls would issue three blocking copies
+    xs, objs, conv = (np.asarray(v) for v in
+                      jax.device_get((sol.x, sol.obj, sol.converged)))
     total = sum(len(c) for c in caps_list)
     if xs.shape[0] < total:
         raise ValueError(f"merged solution has {xs.shape[0]} rows, "

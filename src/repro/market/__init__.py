@@ -12,16 +12,21 @@ compiled stacked-IPM shape.  Online policies
 scored by regret against a clairvoyant per-interval oracle
 (:mod:`repro.market.metrics`).
 """
-from repro.market.events import (MarketEpisode, MarketEvent,
-                                 generate_episode, standard_episodes,
+from repro.market.events import (EventTensor, MarketEpisode, MarketEvent,
+                                 generate_episode, materialise_events,
+                                 stack_event_tensors, standard_episodes,
                                  trace_digest)
+from repro.market.fused import (FusedTotals, run_episode_fused,
+                                run_episodes_vmapped)
 from repro.market.simulator import (EpisodeResult, Fleet, PlatformKind,
                                     catalog_from_problem, run_episode,
                                     slo_for_episode)
 
 __all__ = [
-    "MarketEpisode", "MarketEvent", "generate_episode",
+    "EventTensor", "MarketEpisode", "MarketEvent", "generate_episode",
+    "materialise_events", "stack_event_tensors",
     "standard_episodes", "trace_digest",
+    "FusedTotals", "run_episode_fused", "run_episodes_vmapped",
     "EpisodeResult", "Fleet", "PlatformKind", "catalog_from_problem",
     "run_episode", "slo_for_episode",
 ]

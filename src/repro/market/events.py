@@ -97,6 +97,120 @@ def trace_digest(episode: MarketEpisode) -> str:
     return h.hexdigest()
 
 
+# ---------------------------------------------------------------------------
+# Event-tensor materialisation (device-friendly trace form)
+# ---------------------------------------------------------------------------
+# Integer ids for the device form of an event trace.  NOOP (-1) marks
+# padding rows appended so that differently-sized episodes can stack
+# into one (n_episodes, E_max) tensor batch for vmapped replay.
+KIND_IDS = {k: i for i, k in enumerate(KINDS)}
+NOOP_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class EventTensor:
+    """One episode's trace as flat arrays — the pre-materialised form the
+    fused (``lax.scan``) replay consumes.
+
+    Instance names are resolved to fleet SLOT indices on the host by
+    replaying the fleet's first-empty-slot arrival rule, so the device
+    program never touches strings.  ``kind_id`` is an index into
+    :data:`KINDS` (:data:`NOOP_ID` = padding: zero-duration no-op at
+    ``horizon_s``).  ``scale`` carries the kind-specific payload
+    (``price_scale`` for price ticks, ``beta_scale`` for degrade /
+    recover; 1.0 elsewhere) and ``kind_index`` the arrival's catalogue
+    kind (0 elsewhere).
+    """
+    time: np.ndarray          # (E,) float64; horizon_s on padding rows
+    kind_id: np.ndarray       # (E,) int32; NOOP_ID on padding rows
+    slot: np.ndarray          # (E,) int32 resolved fleet slot
+    kind_index: np.ndarray    # (E,) int32 arrival catalogue kind
+    scale: np.ndarray         # (E,) float64 price/beta payload
+    horizon_s: float
+    init_occupied: np.ndarray  # (max_platforms,) bool at t=0
+    init_kind: np.ndarray      # (max_platforms,) int32 catalogue kind
+    n_events: int              # real (un-padded) event count
+
+    @property
+    def n_slots(self) -> int:
+        return self.init_occupied.shape[0]
+
+
+def materialise_events(episode: MarketEpisode,
+                       pad_to: int = None) -> EventTensor:
+    """Resolve an episode's instance names to slot indices and pack the
+    trace into :class:`EventTensor` arrays, NOOP-padded to ``pad_to``
+    events (default: the episode's own event count).
+
+    Slot resolution replays the SAME first-empty-slot occupancy rule as
+    :meth:`repro.market.simulator.Fleet._occupy`, so the tensor replay
+    and the Python event loop agree on which slot every event touches.
+    """
+    s = episode.max_platforms
+    slots = [None] * s                     # slot -> instance name
+    init_occ = np.zeros(s, dtype=bool)
+    init_kind = np.zeros(s, dtype=np.int32)
+
+    def occupy(name: str) -> int:
+        for i in range(s):
+            if slots[i] is None:
+                slots[i] = name
+                return i
+        raise RuntimeError("fleet full")
+
+    def slot_of(name: str) -> int:
+        return slots.index(name)
+
+    for name, kind_index in episode.initial:
+        i = occupy(name)
+        init_occ[i] = True
+        init_kind[i] = kind_index
+
+    e = len(episode.events)
+    pad_to = e if pad_to is None else int(pad_to)
+    if pad_to < e:
+        raise ValueError(f"pad_to={pad_to} < n_events={e}")
+    time = np.full(pad_to, float(episode.horizon_s))
+    kind_id = np.full(pad_to, NOOP_ID, dtype=np.int32)
+    slot = np.zeros(pad_to, dtype=np.int32)
+    kind_index = np.zeros(pad_to, dtype=np.int32)
+    scale = np.ones(pad_to)
+    for j, ev in enumerate(episode.events):
+        time[j] = ev.time
+        kind_id[j] = KIND_IDS[ev.kind]
+        if ev.kind == ARRIVAL:
+            slot[j] = occupy(ev.platform)
+            kind_index[j] = int(ev.get("kind_index"))
+        elif ev.kind == DEPARTURE:
+            i = slot_of(ev.platform)
+            slots[i] = None
+            slot[j] = i
+        else:
+            slot[j] = slot_of(ev.platform)
+            if ev.kind == PRICE_TICK:
+                scale[j] = float(ev.get("price_scale"))
+            else:                          # DEGRADE / RECOVER
+                scale[j] = float(ev.get("beta_scale"))
+    return EventTensor(time, kind_id, slot, kind_index, scale,
+                       float(episode.horizon_s), init_occ, init_kind, e)
+
+
+def stack_event_tensors(episodes: Sequence[MarketEpisode]
+                        ) -> Tuple[EventTensor, ...]:
+    """Materialise a suite of episodes padded to a COMMON event count, so
+    their arrays stack along a leading axis for vmapped replay.  All
+    episodes must share ``max_platforms`` (one fused fleet shape)."""
+    episodes = list(episodes)
+    if not episodes:
+        raise ValueError("empty episode suite")
+    widths = {ep.max_platforms for ep in episodes}
+    if len(widths) != 1:
+        raise ValueError(f"mixed max_platforms {sorted(widths)}; "
+                         f"vmapped replay needs one fleet shape")
+    e_max = max(len(ep.events) for ep in episodes)
+    return tuple(materialise_events(ep, pad_to=e_max) for ep in episodes)
+
+
 def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
                      seed: int, n_initial: int = 3,
                      max_platforms: int = 8,

@@ -15,13 +15,14 @@ module reduces those to:
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import warnings
 from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro import obs
-from repro.core import pareto
 from repro.market.simulator import EpisodeResult
 
 
@@ -103,16 +104,138 @@ def hypervolume_over_time(metrics: EpisodeMetrics,
     """(times, hv): hypervolume of the realised (cost_rate, makespan)
     operating points accumulated up to each interval end, w.r.t. ``ref``
     (default: 1.1x the episode's worst realised point — pass a shared
-    ref to compare policies)."""
+    ref to compare policies).
+
+    Computed incrementally: a sorted non-dominated front is maintained
+    across intervals and each insertion adjusts only its local strip
+    contributions, so an n-interval episode costs O(n log n) total
+    instead of the former per-prefix recomputation's O(n^2).
+    """
     if ref is None:
+        warnings.warn(
+            "hypervolume_over_time: using a per-episode default ref "
+            "point (1.1x this run's worst realised operating point). "
+            "HV curves built from per-policy defaults are NOT comparable "
+            "across policies — pass a shared ref=(ref_cost, ref_lat).",
+            stacklevel=2)
         ref = (float(metrics.cost_rate.max()) * 1.1,
                float(metrics.makespan.max()) * 1.1)
+    ref_c, ref_l = float(ref[0]), float(ref[1])
+    # front: costs ascending, latencies strictly descending.  Each front
+    # point i owns the strip (c_{i+1} - c_i) * (ref_l - l_i) with
+    # c_end = ref_c — the staircase pareto.hypervolume() integrates,
+    # decomposed into LOCAL contributions so inserts are cheap.
+    fc: List[float] = []
+    fl: List[float] = []
     hv = np.empty(len(metrics.t1))
-    for i in range(len(metrics.t1)):
-        hv[i] = pareto.hypervolume(metrics.cost_rate[:i + 1],
-                                   metrics.makespan[:i + 1],
-                                   ref[0], ref[1])
+    acc = 0.0
+    for i, (c, l) in enumerate(zip(metrics.cost_rate, metrics.makespan)):
+        c, l = float(c), float(l)
+        if c >= ref_c or l >= ref_l:
+            hv[i] = acc                   # outside the ref box: no area
+            continue
+        pos = bisect.bisect_left(fc, c)
+        if (pos > 0 and fl[pos - 1] <= l) or \
+           (pos < len(fc) and fc[pos] == c and fl[pos] <= l):
+            hv[i] = acc                   # dominated (or a duplicate)
+            continue
+        k = pos                           # successors the point dominates
+        while k < len(fc) and fl[k] >= l:
+            k += 1
+        nxt_after = fc[k] if k < len(fc) else ref_c
+        old = new = 0.0
+        if pos > 0:                       # predecessor's strip narrows
+            old_nxt = fc[pos] if pos < len(fc) else ref_c
+            old += (old_nxt - fc[pos - 1]) * (ref_l - fl[pos - 1])
+            new += (c - fc[pos - 1]) * (ref_l - fl[pos - 1])
+        for j in range(pos, k):           # strips of dominated points
+            nxt = fc[j + 1] if j + 1 < k else nxt_after
+            old += (nxt - fc[j]) * (ref_l - fl[j])
+        new += (nxt_after - c) * (ref_l - l)
+        acc += new - old
+        fc[pos:k] = [c]
+        fl[pos:k] = [l]
+        hv[i] = acc
     return metrics.t1, hv
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributionalRegret:
+    """Per-policy cost-regret distribution over a Monte-Carlo trace
+    suite.  Regret on each trace is the policy's total episode cost
+    minus the best total cost ANY evaluated policy achieved on that
+    same trace — so every statistic is >= 0 and the per-trace winner
+    contributes exactly 0."""
+    policy: str
+    n_traces: int
+    mean: float
+    p50: float
+    p90: float
+    p95: float
+    cvar95: float                 # mean regret over the worst 5% traces
+    worst: float
+
+
+def distributional_regret(costs: Dict[str, np.ndarray], *,
+                          alpha: float = 0.95
+                          ) -> Dict[str, DistributionalRegret]:
+    """Distributional (CVaR / quantile-band) regret across a trace suite.
+
+    ``costs`` maps policy name -> (n_traces,) total episode cost, all
+    evaluated on the SAME traces in the same order (e.g. from
+    :func:`repro.market.fused.run_suite_fused` totals via
+    ``total_cost``).  The per-trace reference is the pointwise best
+    policy; ``cvar`` averages the worst ``1 - alpha`` tail.
+    """
+    if not costs:
+        raise ValueError("no policies")
+    mat = np.stack([np.asarray(v, dtype=np.float64)
+                    for v in costs.values()])
+    if mat.ndim != 2:
+        raise ValueError("each policy needs a 1-D per-trace cost array")
+    best = mat.min(axis=0)
+    n = mat.shape[1]
+    k = max(1, int(np.ceil((1.0 - alpha) * n)))   # tail size for CVaR
+    out: Dict[str, DistributionalRegret] = {}
+    for name, row in zip(costs.keys(), mat):
+        r = np.sort(row - best)
+        rep = DistributionalRegret(
+            name, n, float(r.mean()),
+            float(np.quantile(r, 0.50)), float(np.quantile(r, 0.90)),
+            float(np.quantile(r, alpha)), float(r[-k:].mean()),
+            float(r[-1]))
+        obs.gauge(f"market.{name}.regret_cvar{int(alpha * 100)}",
+                  rep.cvar95)
+        out[name] = rep
+    return out
+
+
+def distributional_regret_from_totals(suites, *, alpha: float = 0.95,
+                                      sla_penalty_rates=None
+                                      ) -> Dict[str, DistributionalRegret]:
+    """:func:`distributional_regret` over ``{policy: [FusedTotals, ...]}``
+    suites (see :func:`repro.market.fused.run_suite_fused`).
+    ``sla_penalty_rates`` is a scalar or per-trace sequence charged on
+    SLO-violating seconds."""
+    def rate_for(i):
+        if sla_penalty_rates is None:
+            return 0.0
+        if np.isscalar(sla_penalty_rates):
+            return float(sla_penalty_rates)
+        return float(sla_penalty_rates[i])
+
+    seeds = None
+    costs: Dict[str, np.ndarray] = {}
+    for name, totals in suites.items():
+        s = tuple(t.episode_seed for t in totals)
+        if seeds is None:
+            seeds = s
+        elif s != seeds:
+            raise ValueError(f"policy {name!r} scored a different trace "
+                             f"suite — regret needs matched traces")
+        costs[name] = np.array([t.total_cost(rate_for(i))
+                                for i, t in enumerate(totals)])
+    return distributional_regret(costs, alpha=alpha)
 
 
 @dataclasses.dataclass(frozen=True)

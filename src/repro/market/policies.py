@@ -84,6 +84,12 @@ class Policy:
     def replan(self, view: View, event) -> np.ndarray:
         raise NotImplementedError
 
+    def fused_spec(self):
+        """``(policy_kind, n_weights)`` for the fused ``lax.scan`` replay
+        (:mod:`repro.market.fused`), or ``None`` when this policy's
+        replan has no device port and must run the Python event loop."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # Baselines
@@ -124,6 +130,9 @@ class StaticPolicy(Policy):
         self._alloc = _mask_to_alive(view.problem, self._alloc, view.dead)
         return self._alloc
 
+    def fused_spec(self):
+        return ("static", 0)
+
 
 @dataclasses.dataclass
 class ResplitPolicy(Policy):
@@ -148,6 +157,9 @@ class ResplitPolicy(Policy):
 
     def replan(self, view: View, event) -> np.ndarray:
         return self._plan(view)
+
+    def fused_spec(self):
+        return ("resplit", self.n_weights)
 
 
 # ---------------------------------------------------------------------------

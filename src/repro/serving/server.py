@@ -41,8 +41,9 @@ import dataclasses
 import itertools
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
-from typing import List, Optional, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -125,9 +126,13 @@ class AllocationServer:
     def __init__(self, *, ladder_max: int = 16, linsolve: str = "xla",
                  compact: bool = False, chunk_iters: Optional[int] = None,
                  newton_dtype: str = "float64",
-                 max_iters: Optional[int] = None, tol: Optional[float] = None):
+                 max_iters: Optional[int] = None, tol: Optional[float] = None,
+                 stats_window: int = 4096):
         if ladder_max < 1:
             raise ValueError(f"ladder_max must be >= 1, got {ladder_max}")
+        if stats_window < 1:
+            raise ValueError(
+                f"stats_window must be >= 1, got {stats_window}")
         self.ladder_max = int(ladder_max)
         self._solve_kw = dict(linsolve=linsolve, compact=compact,
                               chunk_iters=chunk_iters,
@@ -143,12 +148,21 @@ class AllocationServer:
         self._shape: Optional[Tuple[int, int]] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = False
-        self.dispatches: List[DispatchRecord] = []
-        self.latencies_s: List[float] = []
+        # per-request/per-dispatch stats keep only a bounded sliding
+        # window: a sustained-load server accrues unbounded requests, so
+        # unbounded Python lists here were a linear memory leak.  The
+        # cumulative totals below never reset; percentiles in stats()
+        # describe the most recent ``stats_window`` entries.
+        self.stats_window = int(stats_window)
+        self.dispatches: Deque[DispatchRecord] = deque(
+            maxlen=self.stats_window)
+        self.latencies_s: Deque[float] = deque(maxlen=self.stats_window)
         # per-request latency breakdown, parallel to latencies_s
-        self.queue_waits_s: List[float] = []
-        self.solve_s: List[float] = []
-        self.slice_s: List[float] = []
+        self.queue_waits_s: Deque[float] = deque(maxlen=self.stats_window)
+        self.solve_s: Deque[float] = deque(maxlen=self.stats_window)
+        self.slice_s: Deque[float] = deque(maxlen=self.stats_window)
+        self.total_requests = 0
+        self.total_dispatches = 0
         self._compiles_after_warm: Optional[int] = None
         self._warm_seq: Optional[int] = None
         self._attr_match: Optional[dict] = None
@@ -306,6 +320,8 @@ class AllocationServer:
             slice_wall = time.perf_counter() - t1
             self.dispatches.append(DispatchRecord(len(reqs), len(nodes),
                                                   width, wall))
+            self.total_dispatches += 1
+            self.total_requests += len(reqs)
             with obs.span("serving.resolve", n_requests=len(reqs)):
                 now = time.perf_counter()
                 for (_, _, req, fut, _), front, t_sub in zip(admitted,
@@ -391,9 +407,11 @@ class AllocationServer:
     # -- observability -------------------------------------------------
 
     def stats(self) -> dict:
-        """Serving statistics since construction: request latency
-        percentiles with a queue-wait / solve / slice breakdown,
-        dispatch count/occupancy and the compile-cache state."""
+        """Serving statistics: CUMULATIVE request/dispatch counts since
+        construction, plus latency percentiles with a queue-wait /
+        solve / slice breakdown and dispatch occupancy computed over the
+        most recent ``stats_window`` entries (the buffers are bounded —
+        see docs/serving.md)."""
         lat = np.asarray(self.latencies_s, dtype=np.float64)
         occ = [d.occupancy for d in self.dispatches]
 
@@ -402,8 +420,10 @@ class AllocationServer:
             return float(np.percentile(a, q) * 1e3) if a.size else None
 
         return {
-            "requests": int(lat.size),
-            "dispatches": len(self.dispatches),
+            "requests": self.total_requests,
+            "dispatches": self.total_dispatches,
+            "stats_window": self.stats_window,
+            "window_requests": int(lat.size),
             "p50_ms": pct(lat, 50),
             "p99_ms": pct(lat, 99),
             "breakdown": {

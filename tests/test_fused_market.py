@@ -1,0 +1,228 @@
+"""Device-side compaction and fused whole-episode replay.
+
+Covers the strong-dtype-carry pitfall end to end: device-compacted
+chunked solves must match the host-compacted oracle to <= 1e-8 with
+``lp.stacked_compile_count`` and ``obs.compile_events`` flat across
+repeat calls (including the ``n_caps``~5 narrow-sweep shape), and the
+``lax.scan`` episode replay must match the Python event loop to 1e-8
+relative on seeded traces without touching the stacked-solver caches.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import lp, pareto
+from repro.market import events, fused, metrics, simulator
+from repro.market.policies import ResplitPolicy, StaticPolicy
+from tests.test_compact import _skewed_stack
+from tests.test_milp import random_problem
+
+EP_KW = dict(horizon_s=3600.0, n_initial=3, max_platforms=6)
+
+
+def _market(seed=3, mu=4, tau=5):
+    base = random_problem(seed, mu, tau)
+    return base, simulator.catalog_from_problem(base)
+
+
+def _slo(catalog, n, episode, factor=0.8):
+    fleet = simulator.Fleet.from_episode(catalog, n, episode)
+    lat = fleet.problem().single_platform_latency()
+    return float(lat[~fleet.dead].min()) * factor
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(a), abs(b), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Device-side compaction
+# ---------------------------------------------------------------------------
+
+def test_device_matches_host_compaction():
+    """compact_mode="device" reproduces the host-compacted oracle to
+    <= 1e-8 and returns device arrays in input row order."""
+    stacked, _ = _skewed_stack(seed0=70)
+    dev = lp.solve_lp_stacked(*stacked, compact=True,
+                              compact_mode="device")
+    host = lp.solve_lp_stacked(*stacked, compact=True,
+                               compact_mode="host")
+    assert np.abs(np.asarray(dev.x) - np.asarray(host.x)).max() <= 1e-8
+    obj_h = np.asarray(host.obj)
+    assert (np.abs(np.asarray(dev.obj) - obj_h)
+            <= 1e-8 * (1 + np.abs(obj_h))).all()
+    assert np.asarray(dev.converged).tolist() == \
+        np.asarray(host.converged).tolist()
+    # device path returns jax arrays (no silent NumPy round-trip)
+    import jax
+    assert isinstance(dev.x, jax.Array)
+    assert isinstance(dev.obj, jax.Array)
+
+
+@pytest.mark.parametrize("batch_shape", ["wide", "narrow"])
+def test_device_compact_compile_flat_across_calls(batch_shape):
+    """Zero mid-call recompiles: after the first device-compacted call,
+    repeated same-shape calls add NOTHING to lp.stacked_compile_count or
+    obs.compile_events — including the n_caps~5 narrow-sweep shape that
+    regressed under host compaction."""
+    if batch_shape == "narrow":
+        stacked, _ = _skewed_stack(n_easy=4, n_hard=1, seed0=81)  # 5 rows
+    else:
+        stacked, _ = _skewed_stack(n_easy=6, n_hard=2, seed0=95)  # 8 rows
+    first = lp.solve_lp_stacked(*stacked, compact=True,
+                                compact_mode="device")
+    count = lp.stacked_compile_count()
+    seq = obs.last_seq()
+    for _ in range(3):
+        again = lp.solve_lp_stacked(*stacked, compact=True,
+                                    compact_mode="device")
+        np.testing.assert_array_equal(np.asarray(first.x),
+                                      np.asarray(again.x))
+    assert lp.stacked_compile_count() == count
+    assert obs.compile_events(kind="compact", since_seq=seq) == []
+    assert obs.compile_events(kind="stacked", since_seq=seq) == []
+
+
+# ---------------------------------------------------------------------------
+# Fused episode replay: loop-vs-scan parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_cls,kind",
+                         [(ResplitPolicy, "resplit"),
+                          (StaticPolicy, "static")])
+def test_fused_episode_matches_python_loop(policy_cls, kind):
+    """One lax.scan device program per episode reproduces the Python
+    event loop's totals to 1e-8 relative on a seeded trace."""
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=7,
+                                 **EP_KW)
+    slo = _slo(catalog, base.n, ep)
+    kw = (dict(node_limit=40, time_limit_s=5.0)
+          if policy_cls is StaticPolicy else {})
+    pol = policy_cls(**kw)
+    loop = metrics.summarise(simulator.run_episode(
+        catalog, base.n, ep, pol, slo_latency=slo))
+    fleet0 = simulator.Fleet.from_episode(catalog, base.n, ep)
+    alloc0 = pol.reset(fleet0.view(0.0, slo))
+    assert pol.fused_spec()[0] == kind
+    ft = fused.run_episode_fused(catalog, base.n, ep, policy_kind=kind,
+                                 slo_latency=slo, alloc0=alloc0)
+    assert _rel(ft.accrued_cost, loop.accrued_cost) <= 1e-8
+    assert _rel(ft.avg_makespan, loop.avg_makespan) <= 1e-8
+    assert _rel(ft.slo_violation_s, loop.slo_violation_s) <= 1e-8
+    assert ft.slo_violations == loop.slo_violations
+    assert ft.replans == loop.replans
+
+
+def test_fused_replay_leaves_stacked_caches_flat():
+    """A fused-episode replay must not touch the stacked-IPM jit caches,
+    and repeated fused replays must not recompile the episode program."""
+    base, catalog = _market()
+    ep = events.generate_episode([k.name for k in catalog], seed=9,
+                                 **EP_KW)
+    slo = _slo(catalog, base.n, ep)
+    pol = ResplitPolicy()
+    fleet0 = simulator.Fleet.from_episode(catalog, base.n, ep)
+    alloc0 = pol.reset(fleet0.view(0.0, slo))
+    first = fused.run_episode_fused(catalog, base.n, ep,
+                                    policy_kind="resplit",
+                                    slo_latency=slo, alloc0=alloc0)
+    stacked_count = lp.stacked_compile_count()
+    fused_count = fused.fused_compile_count()
+    seq = obs.last_seq()
+    for _ in range(3):
+        again = fused.run_episode_fused(catalog, base.n, ep,
+                                        policy_kind="resplit",
+                                        slo_latency=slo, alloc0=alloc0)
+        assert again == first
+    assert lp.stacked_compile_count() == stacked_count
+    assert fused.fused_compile_count() == fused_count
+    assert obs.compile_events(since_seq=seq) == []
+
+
+def test_vmapped_suite_matches_single_episodes():
+    """vmapping the episode axis is exact: each row of the batched
+    replay equals the corresponding single-episode fused replay."""
+    base, catalog = _market()
+    names = [k.name for k in catalog]
+    eps = [events.generate_episode(names, seed=100 + i, **EP_KW)
+           for i in range(6)]
+    tensors = events.stack_event_tensors(eps)
+    pol = ResplitPolicy()
+    slos, alloc0s = [], []
+    for ep in eps:
+        fl = simulator.Fleet.from_episode(catalog, base.n, ep)
+        slo = _slo(catalog, base.n, ep)
+        slos.append(slo)
+        alloc0s.append(pol.reset(fl.view(0.0, slo)))
+    batch = fused.run_episodes_vmapped(
+        catalog, base.n, eps, policy_kind="resplit", slo_latencies=slos,
+        alloc0s=alloc0s, tensors=tensors)
+    assert len(batch) == len(eps)
+    for i, ep in enumerate(eps):
+        single = fused.run_episode_fused(
+            catalog, base.n, ep, policy_kind="resplit",
+            slo_latency=slos[i], alloc0=alloc0s[i], tensor=tensors[i])
+        assert _rel(batch[i].accrued_cost, single.accrued_cost) <= 1e-12
+        assert _rel(batch[i].avg_makespan, single.avg_makespan) <= 1e-12
+        assert batch[i].replans == single.replans
+
+
+# ---------------------------------------------------------------------------
+# Distributional regret + incremental hypervolume
+# ---------------------------------------------------------------------------
+
+def test_distributional_regret_properties():
+    rng = np.random.default_rng(2)
+    a = rng.uniform(1.0, 2.0, 200)
+    d = metrics.distributional_regret({"a": a, "b": a + 0.25,
+                                       "best": a - 0.5})
+    assert d["best"].mean == 0.0 and d["best"].cvar95 == 0.0
+    assert d["a"].mean == pytest.approx(0.5)
+    assert d["b"].mean == pytest.approx(0.75)
+    for rep in d.values():
+        assert rep.n_traces == 200
+        assert 0.0 <= rep.p50 <= rep.p90 <= rep.p95 <= rep.worst
+        assert rep.cvar95 >= rep.p95 - 1e-12
+
+
+def test_distributional_regret_from_totals_requires_matched_traces():
+    t1 = fused.FusedTotals("a", 1, 10.0, 1.0, 2.0, 1.0, 0.0, 0, 1)
+    t2 = fused.FusedTotals("b", 2, 10.0, 1.0, 3.0, 1.0, 0.0, 0, 1)
+    with pytest.raises(ValueError, match="matched traces"):
+        metrics.distributional_regret_from_totals({"a": [t1], "b": [t2]})
+
+
+def test_hypervolume_over_time_incremental_matches_bruteforce():
+    """The incremental front maintains EXACTLY the per-prefix
+    hypervolumes the old O(n^2) loop recomputed."""
+    rng = np.random.default_rng(5)
+    n = 60
+    cr = rng.uniform(0.1, 10.0, n)
+    mk = rng.uniform(0.1, 10.0, n)
+    cr[7], mk[7] = cr[2], mk[2]              # exact duplicate
+    cr[9], mk[9] = cr[2] + 1.0, mk[2] + 1.0  # strictly dominated
+    m = metrics.EpisodeMetrics(
+        "p", 0, float(n), 1.0, np.arange(n, dtype=float),
+        np.arange(1, n + 1, dtype=float), mk, cr, np.ones(n, int),
+        0.0, 0.0, 0.0, 0, 0, 0.0)
+    ref = (8.0, 9.0)
+    _, hv = metrics.hypervolume_over_time(m, ref=ref)
+    brute = [pareto.hypervolume(cr[:i + 1], mk[:i + 1], *ref)
+             for i in range(n)]
+    np.testing.assert_allclose(hv, brute, rtol=1e-12, atol=1e-12)
+    assert (np.diff(hv) >= -1e-12).all()     # HV only ever grows
+
+
+def test_hypervolume_over_time_warns_on_default_ref():
+    m = metrics.EpisodeMetrics(
+        "p", 0, 2.0, 1.0, np.array([0.0, 1.0]), np.array([1.0, 2.0]),
+        np.array([1.0, 2.0]), np.array([1.0, 2.0]), np.ones(2, int),
+        0.0, 0.0, 0.0, 0, 0, 0.0)
+    with pytest.warns(UserWarning, match="NOT comparable"):
+        metrics.hypervolume_over_time(m)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # shared ref: no warning
+        metrics.hypervolume_over_time(m, ref=(3.0, 3.0))

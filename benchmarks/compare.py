@@ -8,9 +8,13 @@ enforced rather than anecdotal.  The gate is deliberately GENEROUS
 may come from different hardware — this catches order-of-magnitude
 regressions and accidental de-jit-ing, not 10% drifts.
 
-Rows are matched by exact name.  Rows present only on one side are
-reported but never fail the gate (benchmarks come and go across PRs);
-rows below ``--min-us`` on both sides are skipped (they time nothing).
+Rows are matched by exact name.  Rows present only in the FRESH run are
+reported but never gated (new benchmarks land before their baseline).
+Rows present only in the BASELINE are a HARD FAILURE: a gated bench
+that silently stops running is indistinguishable from a regression
+(pass ``--allow-missing`` during intentional row removals, together
+with a baseline refresh in the same PR).  Rows below ``--min-us`` on
+both sides are skipped (they time nothing).
 
     python -m benchmarks.compare --baseline BENCH_solver.json \\
         --fresh BENCH_fresh.json [--threshold 4.0] [--min-us 1000]
@@ -39,8 +43,10 @@ def load_rows(path: str) -> dict:
 
 def compare(baseline: dict, fresh: dict, *, threshold: float,
             min_us: float) -> tuple:
-    """Returns (report_lines, regressions) — regressions is the list of
-    (name, base_us, fresh_us, ratio) rows exceeding the threshold."""
+    """Returns (report_lines, regressions, missing) — regressions is the
+    list of (name, base_us, fresh_us, ratio) rows exceeding the
+    threshold; missing is every baseline row absent from the fresh run
+    (a dropped gated bench — hard failure unless --allow-missing)."""
     lines, regressions = [], []
     common = sorted(set(baseline) & set(fresh))
     for name in common:
@@ -56,13 +62,15 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
             flag = "  (much faster — consider refreshing the baseline)"
         lines.append(f"{name}: {b:.0f}us -> {f:.0f}us "
                      f"({ratio:.2f}x){flag}")
-    for name in sorted(set(baseline) - set(fresh)):
-        lines.append(f"{name}: only in baseline (row removed?)")
+    missing = sorted(set(baseline) - set(fresh))
+    for name in missing:
+        lines.append(f"{name}: MISSING from fresh run "
+                     "(gated row dropped?)")
     for name in sorted(set(fresh) - set(baseline)):
         lines.append(f"{name}: new row (not gated)")
     if not common:
         lines.append("no rows in common — nothing gated")
-    return lines, regressions
+    return lines, regressions, missing
 
 
 def main() -> None:
@@ -81,21 +89,37 @@ def main() -> None:
     ap.add_argument("--min-us", type=float, default=1000.0,
                     help="skip rows faster than this on both sides "
                          "(default 1000us)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="downgrade baseline rows missing from the "
+                         "fresh run to a warning (for PRs that "
+                         "intentionally remove a bench and refresh "
+                         "the baseline)")
     args = ap.parse_args()
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
-    lines, regressions = compare(base, fresh, threshold=args.threshold,
-                                 min_us=args.min_us)
+    lines, regressions, missing = compare(
+        base, fresh, threshold=args.threshold, min_us=args.min_us)
     print(f"bench-compare: baseline={args.baseline} fresh={args.fresh} "
           f"threshold={args.threshold}x min_us={args.min_us}")
     for line in lines:
         print(line)
+    failed = False
     if regressions:
+        failed = True
         print(f"\n{len(regressions)} row(s) regressed past "
               f"{args.threshold}x:", file=sys.stderr)
         for name, b, f, ratio in regressions:
             print(f"  {name}: {b:.0f}us -> {f:.0f}us ({ratio:.2f}x)",
                   file=sys.stderr)
+    if missing and not args.allow_missing:
+        failed = True
+        print(f"\n{len(missing)} gated row(s) missing from the fresh "
+              "run (did a bench silently stop running? pass "
+              "--allow-missing for intentional removals):",
+              file=sys.stderr)
+        for name in missing:
+            print(f"  {name}", file=sys.stderr)
+    if failed:
         sys.exit(1)
     print("bench-compare: OK")
 

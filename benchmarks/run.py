@@ -19,6 +19,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=None,
                     help="global seed offset threaded through every "
                          "benchmark (reproducible CI artifacts)")
+    ap.add_argument("--force-devices", type=int, default=None,
+                    metavar="N",
+                    help="fake an N-device CPU mesh via "
+                         "--xla_force_host_platform_device_count (set "
+                         "before any jax import — required for the "
+                         "benchmarks.shard_bench rows on a 1-CPU host)")
     ap.add_argument("--out", default=None,
                     help="also write the CSV to this path")
     ap.add_argument("--json-out", default=None,
@@ -46,6 +52,16 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     if args.seed is not None:
         os.environ["REPRO_BENCH_SEED"] = str(args.seed)
+    if args.force_devices:
+        # must precede benchmark imports too: XLA reads the flag when jax
+        # initialises its CPU backend, and every benchmark module imports
+        # jax transitively
+        assert "jax" not in sys.modules, (
+            "--force-devices must be applied before jax is imported")
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.force_devices}").strip()
 
     # The FULL spot-market policy benchmark and the serving benchmark are
     # NOT in this list: each is its own CLI (``python -m
@@ -70,6 +86,11 @@ def main() -> None:
         ("obs", obs_bench),
         ("market_fused", market_fused_bench),
     ]
+    if args.force_devices and args.force_devices > 1:
+        # the sharded rows only mean something on a multi-device mesh, so
+        # the module rides behind the flag rather than in the default list
+        from benchmarks import shard_bench
+        modules.append(("shard", shard_bench))
     if args.profile_dir:
         import jax
         jax.profiler.start_trace(args.profile_dir)

@@ -1,0 +1,256 @@
+"""Sharded megabatch benchmarks: the stacked IPM over a device mesh.
+
+Rows gated into ``BENCH_solver.json`` (run under
+``python -m benchmarks.run --smoke --force-devices 8``):
+
+* ``solver.shard.rows_1e5`` — ONE ``lp.solve_lp_stacked`` call at 10^5
+  rows on the forced 8-device CPU mesh; parity vs an unsharded solve of
+  a 4096-row slice is asserted to <= 1e-8 over converged rows, and the
+  second call must add NOTHING to ``lp.stacked_compile_count`` or
+  ``obs.compile_events`` (the ``mesh_shape`` config key keeps sharded
+  and unsharded signatures distinct).
+* ``solver.shard.scaling`` — the skewed-straggler fixture with every
+  straggler packed into shard 0.  The unsharded lockstep while_loop
+  charges EVERY row for the stragglers' ~100 trips; shard-local
+  lockstep confines them to one shard, so even on a single CPU core
+  the 8-shard mesh must win >= 3x (asserted when n_shards == 8).
+* ``solver.shard.parity`` — sharded vs single-device stacked IPM on the
+  straggler fixture, monolithic AND device-compacted drivers, <= 1e-8
+  over converged rows (asserted).
+* ``market.episodes.sharded_throughput`` — ``run_episodes_vmapped``
+  with ``mesh=`` + ``episode_chunk=`` sharding the episode axis;
+  parity vs the unsharded replay asserted to 1e-8 relative.
+
+Requires >= 2 local devices — run via ``benchmarks.run
+--force-devices 8`` (sets ``--xla_force_host_platform_device_count``
+before jax import) or under the CI shard job.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import seeded, smoke_scaled, timeit
+from repro import obs
+from repro.core import lp
+
+
+def _easy_lp(seed, n=12, meq=3, mineq=5):
+    """A small well-conditioned random LP row (feasible by construction)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(meq, n))
+    x0 = rng.uniform(0.1, 0.9, size=n)
+    g = rng.normal(size=(mineq, n))
+    slack = rng.uniform(0.05, 1.0, size=mineq)
+    c = rng.normal(size=n)
+    lb, ub = np.zeros(n), np.full(n, np.inf)
+    mask = rng.random(n) < 0.5
+    ub[mask] = rng.uniform(1.0, 3.0, size=int(mask.sum()))
+    return c, a, a @ x0, g, g @ x0 + slack, lb, ub
+
+
+def _stack(probs):
+    return [np.stack(arrs) for arrs in zip(*probs)]
+
+
+def run() -> list:
+    import jax
+
+    from repro.launch.mesh import make_solver_mesh
+
+    rows = []
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        raise RuntimeError(
+            "shard_bench needs a multi-device mesh — run via "
+            "'python -m benchmarks.run --force-devices 8' so "
+            "--xla_force_host_platform_device_count is set before "
+            "jax imports")
+    mesh = make_solver_mesh()
+    n_shards = lp.mesh_n_shards(mesh)
+
+    # ---- solver.shard.rows_1e5 ------------------------------------------
+    # The megabatch is the stressor, not the per-row LP: tile a pool of
+    # small rows pre-filtered to fast convergence (a straggler in the
+    # pool would be replicated into EVERY shard and dominate the row).
+    pool = [_easy_lp(seeded(500) + i) for i in range(256)]
+    scan = lp.solve_lp_stacked(*_stack(pool))
+    keep = (np.asarray(scan.converged)
+            & (np.asarray(scan.iters) <= 18))
+    pool = [p for p, k in zip(pool, keep) if k]
+    n_rows = 100_000
+    reps = n_rows // len(pool) + 1
+    stack = [np.concatenate([np.stack(arrs)] * reps)[:n_rows]
+             for arrs in zip(*pool)]
+    sol = lp.solve_lp_stacked(*stack, mesh=mesh)          # warm
+    jax.block_until_ready(sol.x)
+    count0 = lp.stacked_compile_count()
+    seq0 = obs.last_seq()
+    t0 = time.perf_counter()
+    sol = lp.solve_lp_stacked(*stack, mesh=mesh)
+    jax.block_until_ready(sol.x)
+    wall = time.perf_counter() - t0
+    recompiles = lp.stacked_compile_count() - count0
+    mesh_events = [e for e in obs.compile_events(since_seq=seq0)
+                   if "mesh_shape" in e.config]
+    assert recompiles == 0 and not mesh_events, (
+        f"sharded 1e5-row call recompiled after warmup: "
+        f"count_delta={recompiles}, events={mesh_events}")
+    # parity vs a single-device solve of a 4096-row slice: the IPM is
+    # row-independent under vmap, so per-row answers cannot depend on
+    # batch membership — only on sharded-vs-unsharded codegen, which is
+    # exactly what this row measures
+    n_slice = 4096
+    ref = lp.solve_lp_stacked(*(a[:n_slice] for a in stack))
+    conv = np.asarray(ref.converged) & np.asarray(sol.converged)[:n_slice]
+    parity = float(np.abs(np.asarray(ref.obj)
+                          - np.asarray(sol.obj)[:n_slice])[conv].max())
+    assert parity <= 1e-8, f"shard-vs-single parity {parity:.2e} > 1e-8"
+    rows.append((f"solver.shard.rows_1e5.{n_shards}shards", wall * 1e6,
+                 f"rows={n_rows};rows_per_s={n_rows / wall:.0f};"
+                 f"parity_vs_single={parity:.2e};parity_1e-8=True;"
+                 f"recompiles_after_warmup={recompiles};"
+                 f"non_converged={int((~np.asarray(sol.converged)).sum())}"))
+
+    # ---- solver.shard.scaling + solver.shard.parity ---------------------
+    # Skewed-straggler fixture (same generator as solver_bench) with the
+    # stragglers packed into shard 0: the honest shard-local-lockstep
+    # win, measurable even on one CPU core because the OTHER shards stop
+    # paying the stragglers' while_loop trips.
+    from benchmarks.solver_bench import STRAGGLER_SEEDS, _straggler_lp
+    hard_seeds = STRAGGLER_SEEDS
+    n_rows_s = smoke_scaled(512, 256)
+    n_hard = 4
+    local = n_rows_s // n_shards
+    # the easy generator occasionally rolls an accidental straggler;
+    # prescan and keep only fast-converging rows so the ONLY stragglers
+    # are the crafted ones packed into shard 0 (otherwise shard-local
+    # lockstep pays for stragglers in every shard and the row measures
+    # noise, not the mechanism)
+    cand = [_straggler_lp(seeded(900) + i, False)
+            for i in range(2 * n_rows_s)]
+    scan_s = lp.solve_lp_stacked(*_stack(cand))
+    fast = (np.asarray(scan_s.converged)
+            & (np.asarray(scan_s.iters) <= 20))
+    easy = [p for p, k in zip(cand, fast) if k][:n_rows_s - n_hard]
+    assert len(easy) == n_rows_s - n_hard, "prescan pool too small"
+    probs = [_straggler_lp(hard_seeds[i % len(hard_seeds)], True)
+             for i in range(n_hard)]
+    probs += easy
+    stack_s = _stack(probs)                 # stragglers land in shard 0
+    mono = lp.solve_lp_stacked(*stack_s)                         # warm
+    shrd = lp.solve_lp_stacked(*stack_s, mesh=mesh)              # warm
+    us_mono = timeit(lambda: np.asarray(lp.solve_lp_stacked(*stack_s).x),
+                     repeats=3, warmup=0)
+    us_shrd = timeit(lambda: np.asarray(
+        lp.solve_lp_stacked(*stack_s, mesh=mesh).x), repeats=3, warmup=0)
+    speedup = us_mono / max(us_shrd, 1e-9)
+    if n_shards == 8:
+        assert speedup >= 3.0, (
+            f"sharded scaling {speedup:.2f}x < 3x at 8 shards")
+    rows.append((f"solver.shard.scaling.{n_rows_s}rows", us_shrd,
+                 f"speedup_vs_single={speedup:.2f}x;n_shards={n_shards};"
+                 f"target_3x_met={speedup >= 3.0};stragglers={n_hard};"
+                 f"straggler_shard=0;local_width={local}"))
+
+    conv_s = np.asarray(mono.converged) & np.asarray(shrd.converged)
+    par_mono = float(np.abs(np.asarray(mono.obj)
+                            - np.asarray(shrd.obj))[conv_s].max())
+    comp_1 = lp.solve_lp_stacked(*stack_s, compact=True,
+                                 compact_mode="device")
+    comp_n = lp.solve_lp_stacked(*stack_s, compact=True,
+                                 compact_mode="device", mesh=mesh)
+    conv_c = np.asarray(comp_1.converged) & np.asarray(comp_n.converged)
+    par_comp = float(np.abs(np.asarray(comp_1.obj)
+                            - np.asarray(comp_n.obj))[conv_c].max())
+    parity_max = max(par_mono, par_comp)
+    assert parity_max <= 1e-8, (
+        f"shard parity {parity_max:.2e} > 1e-8 "
+        f"(monolithic {par_mono:.2e}, compact {par_comp:.2e})")
+    rows.append((f"solver.shard.parity.{n_rows_s}rows", 0.0,
+                 f"monolithic_diff={par_mono:.2e};"
+                 f"device_compact_diff={par_comp:.2e};parity_1e-8=True;"
+                 f"converged={int(conv_s.sum())}/{n_rows_s}"))
+
+    # ---- market.episodes.sharded_throughput -----------------------------
+    # Episode-axis sharding through run_episodes_vmapped(mesh=) with the
+    # memory-aware episode_chunk knob; parity vs the unsharded replay.
+    from repro.market import events as mev
+    from repro.market import fused as mfused
+    from repro.market import simulator as msim
+    from repro.market.policies import ResplitPolicy
+
+    from benchmarks.common import experiment_problem
+    fitted, *_ = experiment_problem(smoke_scaled(12, 8),
+                                    smoke_scaled(6, 4), seed=3)
+    catalog = msim.catalog_from_problem(fitted)
+    n_eps = smoke_scaled(64, 16)
+    eps = [mev.generate_episode([k.name for k in catalog],
+                                seed=seeded(20_000) + i, horizon_s=3600.0,
+                                n_initial=min(3, len(catalog)),
+                                max_platforms=6)
+           for i in range(n_eps)]
+    tensors = mev.stack_event_tensors(eps)
+    seeder = ResplitPolicy()
+    slos, alloc0s = [], []
+    for ep in eps:
+        fl = msim.Fleet.from_episode(catalog, fitted.n, ep)
+        lat = fl.problem().single_platform_latency()
+        s = float(lat[~fl.dead].min()) * 0.8
+        slos.append(s)
+        alloc0s.append(seeder.reset(fl.view(0.0, s)))
+    kw = dict(policy_kind="resplit", slo_latencies=slos, alloc0s=alloc0s,
+              tensors=tensors)
+    chunk = max(n_shards, n_eps // 2)
+    base = mfused.run_episodes_vmapped(catalog, fitted.n, eps, **kw)
+    shard = mfused.run_episodes_vmapped(catalog, fitted.n, eps, mesh=mesh,
+                                        episode_chunk=chunk, **kw)  # warm
+    ep_par = max(abs(s.accrued_cost - b.accrued_cost)
+                 / max(abs(b.accrued_cost), 1e-12)
+                 for s, b in zip(shard, base))
+    assert ep_par <= 1e-8 and all(
+        s.replans == b.replans for s, b in zip(shard, base)), (
+        f"sharded episode replay diverged: rel={ep_par:.2e}")
+    t0 = time.perf_counter()
+    mfused.run_episodes_vmapped(catalog, fitted.n, eps, mesh=mesh,
+                                episode_chunk=chunk, **kw)
+    wall_ep = time.perf_counter() - t0
+    rows.append((f"market.episodes.sharded_throughput.{n_eps}eps",
+                 wall_ep * 1e6,
+                 f"eps_per_s={n_eps / max(wall_ep, 1e-9):.1f};"
+                 f"n_shards={n_shards};episode_chunk={chunk};"
+                 f"parity_rel={ep_par:.2e};parity_1e-8=True"))
+    return rows
+
+
+def main() -> None:
+    """Standalone CLI for the CI shard job (the full suite reaches these
+    rows via ``benchmarks.run --force-devices N``).  The device count
+    must be forced via XLA_FLAGS in the ENVIRONMENT — this module has
+    already imported jax by the time main() runs."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    import os
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if args.seed is not None:
+        os.environ["REPRO_BENCH_SEED"] = str(args.seed)
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
+    for name, us, derived in run():
+        line = f"{name},{us:.1f},{derived}"
+        lines.append(line)
+        print(line, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,32 @@ from benchmarks.common import (SMOKE, experiment_problem, seeded,
                                smoke_scaled, timeit)
 from repro.core import lp, milp, pareto
 
+# hard seeds are fixture constants, picked (by scanning the generator)
+# for genuine stragglers: 1043 runs to max_iters (a residual-classified
+# non-convergence), the others straggle at ~35-60 IPM iterations and
+# converge; easy rows land at ~8-15.  Shared with benchmarks.shard_bench
+# (which packs the stragglers into one shard).
+STRAGGLER_SEEDS = (1043, 1105, 1143, 1259)
+
+
+def _straggler_lp(seed, hard):
+    rng = np.random.default_rng(seed)
+    n, meq, mineq = 24, 6, 10
+    a = rng.normal(size=(meq, n))
+    x0 = rng.uniform(0.1, 0.9, size=n)
+    g = rng.normal(size=(mineq, n))
+    slack = (rng.uniform(1e-7, 1e-5, size=mineq) if hard
+             else rng.uniform(0.05, 1.0, size=mineq))
+    c = rng.normal(size=n)
+    if hard:
+        # near-degenerate: tiny inequality slacks + 8-decade cost
+        # spread defeat the equilibration enough to stall progress
+        c = c * np.logspace(-4, 4, n)[rng.permutation(n)]
+    lb, ub = np.zeros(n), np.full(n, np.inf)
+    mask = rng.random(n) < 0.5
+    ub[mask] = rng.uniform(1.0, 3.0, size=int(mask.sum()))
+    return c, a, a @ x0, g, g @ x0 + slack, lb, ub
+
 
 def run() -> list:
     rows = []
@@ -109,30 +135,7 @@ def run() -> list:
     # per-row answers matching and the compile count bounded by the
     # number of distinct ladder widths.
     n_rows, n_hard = smoke_scaled(64, 24), smoke_scaled(4, 2)
-    # hard seeds are fixture constants, picked (by scanning the generator)
-    # for genuine stragglers: 1043 runs to max_iters (a residual-
-    # classified non-convergence), the others straggle at ~35-60 IPM
-    # iterations and converge; easy rows land at ~8-15
-    hard_seeds = (1043, 1105, 1143, 1259)
-
-    def _straggler_lp(seed, hard):
-        rng = np.random.default_rng(seed)
-        n, meq, mineq = 24, 6, 10
-        a = rng.normal(size=(meq, n))
-        x0 = rng.uniform(0.1, 0.9, size=n)
-        g = rng.normal(size=(mineq, n))
-        slack = (rng.uniform(1e-7, 1e-5, size=mineq) if hard
-                 else rng.uniform(0.05, 1.0, size=mineq))
-        c = rng.normal(size=n)
-        if hard:
-            # near-degenerate: tiny inequality slacks + 8-decade cost
-            # spread defeat the equilibration enough to stall progress
-            c = c * np.logspace(-4, 4, n)[rng.permutation(n)]
-        lb, ub = np.zeros(n), np.full(n, np.inf)
-        mask = rng.random(n) < 0.5
-        ub[mask] = rng.uniform(1.0, 3.0, size=int(mask.sum()))
-        return c, a, a @ x0, g, g @ x0 + slack, lb, ub
-
+    hard_seeds = STRAGGLER_SEEDS
     probs = [_straggler_lp(seeded(300) + i, False)
              for i in range(n_rows - n_hard)]
     probs += [_straggler_lp(hard_seeds[i % len(hard_seeds)], True)

@@ -28,6 +28,14 @@ Two stacked execution drivers share the same per-iteration math:
   row order; ``compact_mode="host"`` keeps the legacy NumPy round-trip
   as a parity oracle.
 
+Both drivers optionally shard the batch (row) axis over a device mesh
+(``solve_lp_stacked(mesh=, row_spec=)``, via ``shard_map``): rows are
+independent, so each shard runs the same driver on its own block — a
+shard's lockstep while-loop retires as soon as ITS slowest row
+converges, and compaction stays shard-local (the only cross-shard
+traffic is the two per-chunk host scalars, a pmax and a psum).  See
+docs/solver.md "Sharded megabatches".
+
 Orthogonally, ``newton_dtype="float32"`` switches the Newton
 normal-equation solves to a mixed-precision path: factor/solve in
 float32 with one float64 iterative-refinement step, falling back to the
@@ -464,6 +472,60 @@ def solve_node_lp(node, *, max_iters: int = _MAX_ITERS,
 _BASE_NDIM = (1, 2, 1, 2, 1, 1, 1)          # c, a_eq, b_eq, g, h, lb, ub
 
 
+# -- mesh helpers (row-sharded megabatches; docs/solver.md "Sharded
+# megabatches").  LP rows are embarrassingly data-parallel, so sharding
+# is pure row partitioning: each shard runs the SAME driver on its own
+# row block and the only cross-shard traffic is the two per-chunk host
+# scalars of the compacted driver (a pmax and a psum).
+
+def _lp_row_axes(mesh, row_spec=None):
+    from repro.runtime.sharding import lp_row_axes
+    return lp_row_axes(mesh, row_spec)
+
+
+def mesh_n_shards(mesh, row_spec=None) -> int:
+    """Number of row shards ``mesh`` yields for stacked megabatches (the
+    product of its row-axis sizes; 1 when ``mesh is None``)."""
+    if mesh is None:
+        return 1
+    return _n_shards_of(mesh, _lp_row_axes(mesh, row_spec))
+
+
+def _n_shards_of(mesh, row_axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in row_axes], dtype=np.int64)) \
+        if mesh is not None else 1
+
+
+def _mesh_shape_of(mesh, row_axes):
+    """Logical mesh identity recorded in every stacked compile-event
+    config (the ``mesh_shape`` key): ``((axis, size), ...)`` over the
+    row axes, or None for unsharded solves — so attribution filters
+    built for one mesh can never silently match solves run under
+    another (or under no mesh at all)."""
+    if mesh is None:
+        return None
+    return tuple((a, int(mesh.shape[a])) for a in row_axes)
+
+
+def _mesh_shape_key(mesh, row_spec=None):
+    return (None if mesh is None
+            else _mesh_shape_of(mesh, _lp_row_axes(mesh, row_spec)))
+
+
+def _mesh_key_of(mesh, row_axes):
+    """jit-cache identity of a mesh: logical shape PLUS device ids — the
+    same logical mesh over different devices is a different executable."""
+    if mesh is None:
+        return None
+    return (_mesh_shape_of(mesh, row_axes),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def _row_pspec(row_axes):
+    from jax.sharding import PartitionSpec as PS
+    return PS(row_axes if len(row_axes) > 1 else row_axes[0])
+
+
 # jit'd stacked-solver variants (monolithic vmapped IPMs, chunk preps,
 # chunk steppers, ...) keyed by configuration, plus the set of distinct
 # call signatures (pattern + shapes) seen so far — the basis of
@@ -482,6 +544,23 @@ def _registered_jit(key, build):
     return fn
 
 
+def _stacked_one(max_iters: int, linsolve: str, newton_dtype: str):
+    """One row of the monolithic stacked solve: standardise, run the IPM
+    to convergence, un-standardise.  Shared by the single-device
+    jit(vmap) driver and the per-shard body of the sharded driver."""
+    def one(tol, active, c, a_eq, b_eq, g, h, lb, ub):
+        std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
+        x, y, it, rp, rd, gap, it32, bad = _solve_std(
+            std.a, std.b, std.c, std.u, tol, active,
+            max_iters=max_iters, linsolve=linsolve,
+            newton_dtype=newton_dtype)
+        xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
+        return (LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd,
+                           gap), it32, bad)
+
+    return one
+
+
 def _stacked_solver(axes, max_iters: int, linsolve: str, newton_dtype: str):
     """jit(vmap(IPM)) for a given batching pattern; cached so the whole
     batched sweep compiles exactly once per (pattern, shape).  The per-row
@@ -489,19 +568,39 @@ def _stacked_solver(axes, max_iters: int, linsolve: str, newton_dtype: str):
     iteration zero, and under the Pallas backend each Newton step of the
     whole batch is ONE blocked batched-Cholesky kernel launch."""
     def build():
-        def one(tol, active, c, a_eq, b_eq, g, h, lb, ub):
-            std = _standardise(c, a_eq, b_eq, g, h, lb, ub)
-            x, y, it, rp, rd, gap, it32, bad = _solve_std(
-                std.a, std.b, std.c, std.u, tol, active,
-                max_iters=max_iters, linsolve=linsolve,
-                newton_dtype=newton_dtype)
-            xo = x[:std.n_orig] * std.col_scale[:std.n_orig] + std.lb
-            return (LPSolution(xo, c @ xo, y * std.row_scale, it, rp, rd,
-                               gap), it32, bad)
-
+        one = _stacked_one(max_iters, linsolve, newton_dtype)
         return jax.jit(jax.vmap(one, in_axes=(None, 0) + axes))
 
     return _registered_jit((axes, max_iters, linsolve, newton_dtype), build)
+
+
+def _stacked_solver_sharded(axes, max_iters: int, linsolve: str,
+                            newton_dtype: str, mesh, row_axes):
+    """jit(shard_map(vmap(IPM))) over the mesh's row axes: every shard
+    runs the monolithic lockstep driver on its own row block, so a
+    shard's while-loop retires as soon as ITS slowest row converges —
+    stragglers stall only the shard that holds them, which is also why
+    sharding speeds up even a lockstep (CPU/SIMD) backend.  LP rows are
+    independent, so the program contains NO collectives
+    (``check_rep=False`` because the replication checker has no rule
+    for ``lax.while_loop``)."""
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.runtime.sharding import shard_map_compat
+
+    def build():
+        one = _stacked_one(max_iters, linsolve, newton_dtype)
+        vmapped = jax.vmap(one, in_axes=(None, 0) + axes)
+        rspec = _row_pspec(row_axes)
+        in_specs = (PS(), rspec) + tuple(rspec if ax == 0 else PS()
+                                         for ax in axes)
+        return jax.jit(shard_map_compat(vmapped, mesh=mesh,
+                                        in_specs=in_specs,
+                                        out_specs=rspec, check_rep=False))
+
+    return _registered_jit(("sharded", axes, max_iters, linsolve,
+                            newton_dtype, _mesh_key_of(mesh, row_axes)),
+                           build)
 
 
 def stacked_compile_count() -> int:
@@ -717,7 +816,8 @@ def _chunk_stepper(chunk_iters: int, max_iters: int, linsolve: str,
 
 
 def _chunk_merge_stepper(width: int, chunk_iters: int, max_iters: int,
-                         linsolve: str, newton_dtype: str):
+                         linsolve: str, newton_dtype: str,
+                         mesh=None, row_axes=None):
     """Fused per-width device program for in-jit compaction: gather the
     ``width``-row alive prefix of the full-batch buffers, step it, write
     it back, and compact — a stable argsort over the whole buffer moves
@@ -726,62 +826,97 @@ def _chunk_merge_stepper(width: int, chunk_iters: int, max_iters: int,
     on device in strong dtypes; only TWO scalars (alive count, lockstep
     trip count) ever reach the host per chunk, so the ladder's
     width-selection control flow costs one tiny transfer instead of the
-    legacy full-carry round-trip."""
+    legacy full-carry round-trip.
+
+    Under a ``mesh`` the whole program runs inside ``shard_map`` over
+    the row axes and ``width`` is the PER-SHARD buffer width: survivors
+    never cross shards (the argsort+gather compaction is shard-local, a
+    pure row permutation of the shard's own block), so the hot loop has
+    no collectives — only the two host scalars do: the next buffer
+    width must hold the LARGEST shard's survivor count (``pmax``) and
+    the trip accounting SUMS the per-shard lockstep trips (``psum``)."""
     step_one = _chunk_step_one(chunk_iters, max_iters, linsolve,
                                newton_dtype)
 
-    def build():
-        def merge(tol, a_f, b_f, c_f, u_f, carry, rp_f, rd_f, mu_f, perm):
-            idx = perm[:width]
-            prev = jax.tree.map(lambda f: f[:width], carry)
-            it_prev, it32_prev = prev.it, prev.it32
-            out, rp_w, rd_w, mu_w = jax.vmap(
-                step_one, in_axes=(None, 0, 0, 0, 0, 0))(
-                tol, a_f[idx], b_f[idx], c_f[idx], u_f[idx], prev)
-            carry = jax.tree.map(lambda f, pre: f.at[:width].set(pre),
-                                 carry, out)
-            rp_f = rp_f.at[:width].set(rp_w)
-            rd_f = rd_f.at[:width].set(rd_w)
-            mu_f = mu_f.at[:width].set(mu_w)
-            # a mixed-precision chunk serialises an f32 phase and an f64
-            # phase: the lockstep trips actually executed are the max f32
-            # advance PLUS the max f64 advance over the prefix
-            d32 = out.it32 - it32_prev
-            d64 = (out.it - out.it32) - (it_prev - it32_prev)
-            trips = (jnp.maximum(jnp.max(d32), 0)
-                     + jnp.maximum(jnp.max(d64), 0))
-            alive_w = (~out.done) & (out.it < max_iters)
-            n_alive = jnp.sum(alive_w.astype(jnp.int32))
-            batch = perm.shape[0]
-            alive_f = jnp.zeros((batch,), bool).at[:width].set(alive_w)
-            order = jnp.argsort(~alive_f, stable=True)
-            carry = jax.tree.map(lambda f: f[order], carry)
-            return (carry, rp_f[order], rd_f[order], mu_f[order],
-                    perm[order], n_alive, trips)
+    def merge(tol, a_f, b_f, c_f, u_f, carry, rp_f, rd_f, mu_f, perm):
+        idx = perm[:width]
+        prev = jax.tree.map(lambda f: f[:width], carry)
+        it_prev, it32_prev = prev.it, prev.it32
+        out, rp_w, rd_w, mu_w = jax.vmap(
+            step_one, in_axes=(None, 0, 0, 0, 0, 0))(
+            tol, a_f[idx], b_f[idx], c_f[idx], u_f[idx], prev)
+        carry = jax.tree.map(lambda f, pre: f.at[:width].set(pre),
+                             carry, out)
+        rp_f = rp_f.at[:width].set(rp_w)
+        rd_f = rd_f.at[:width].set(rd_w)
+        mu_f = mu_f.at[:width].set(mu_w)
+        # a mixed-precision chunk serialises an f32 phase and an f64
+        # phase: the lockstep trips actually executed are the max f32
+        # advance PLUS the max f64 advance over the prefix
+        d32 = out.it32 - it32_prev
+        d64 = (out.it - out.it32) - (it_prev - it32_prev)
+        trips = (jnp.maximum(jnp.max(d32), 0)
+                 + jnp.maximum(jnp.max(d64), 0))
+        alive_w = (~out.done) & (out.it < max_iters)
+        n_alive = jnp.sum(alive_w.astype(jnp.int32))
+        batch = perm.shape[0]
+        alive_f = jnp.zeros((batch,), bool).at[:width].set(alive_w)
+        order = jnp.argsort(~alive_f, stable=True)
+        carry = jax.tree.map(lambda f: f[order], carry)
+        if mesh is not None:
+            n_alive = jax.lax.pmax(n_alive, row_axes)
+            trips = jax.lax.psum(trips, row_axes)
+        return (carry, rp_f[order], rd_f[order], mu_f[order],
+                perm[order], n_alive, trips)
 
-        return jax.jit(merge)
+    def build():
+        if mesh is None:
+            return jax.jit(merge)
+        from jax.sharding import PartitionSpec as PS
+
+        from repro.runtime.sharding import shard_map_compat
+        rspec = _row_pspec(row_axes)
+        return jax.jit(shard_map_compat(
+            merge, mesh=mesh, in_specs=(PS(),) + (rspec,) * 9,
+            out_specs=(rspec,) * 5 + (PS(), PS()), check_rep=False))
 
     return _registered_jit(("chunk-merge", width, chunk_iters, max_iters,
-                            linsolve, newton_dtype), build)
+                            linsolve, newton_dtype,
+                            _mesh_key_of(mesh, row_axes)), build)
 
 
-def _chunk_finalize(n_orig: int):
+def _chunk_finalize(n_orig: int, mesh=None, row_axes=None,
+                    c_batched: bool = True):
     """On-device epilogue of the device-compacted driver: invert the
     slot→row permutation and un-standardise, so the caller receives
     device arrays already restored to the INPUT row order (no host
-    scatter, no NumPy round-trip)."""
+    scatter, no NumPy round-trip).  Under a ``mesh`` the inversion runs
+    inside ``shard_map``: the permutation holds SHARD-LOCAL slot
+    indices, so a global argsort would interleave rows across shards —
+    each shard must invert (and gather) only its own block."""
+    def fin(carry, rp, rd, mu, perm, c0, lb, csc, rsc):
+        inv = jnp.argsort(perm)
+        xo = (carry.x[inv][:, :n_orig] * csc[:, :n_orig]) + lb
+        obj = (xo @ c0 if c0.ndim == 1
+               else jnp.einsum("bn,bn->b", c0, xo))
+        return (xo, obj, carry.y[inv] * rsc, carry.it[inv], rp[inv],
+                rd[inv], mu[inv], carry.it32[inv], carry.bad[inv])
+
     def build():
-        def fin(carry, rp, rd, mu, perm, c0, lb, csc, rsc):
-            inv = jnp.argsort(perm)
-            xo = (carry.x[inv][:, :n_orig] * csc[:, :n_orig]) + lb
-            obj = (xo @ c0 if c0.ndim == 1
-                   else jnp.einsum("bn,bn->b", c0, xo))
-            return (xo, obj, carry.y[inv] * rsc, carry.it[inv], rp[inv],
-                    rd[inv], mu[inv], carry.it32[inv], carry.bad[inv])
+        if mesh is None:
+            return jax.jit(fin)
+        from jax.sharding import PartitionSpec as PS
 
-        return jax.jit(fin)
+        from repro.runtime.sharding import shard_map_compat
+        rspec = _row_pspec(row_axes)
+        c_spec = rspec if c_batched else PS()
+        return jax.jit(shard_map_compat(
+            fin, mesh=mesh,
+            in_specs=(rspec,) * 5 + (c_spec,) + (rspec,) * 3,
+            out_specs=rspec, check_rep=False))
 
-    return _registered_jit(("chunk-finalize", n_orig), build)
+    return _registered_jit(("chunk-finalize", n_orig,
+                            _mesh_key_of(mesh, row_axes), c_batched), build)
 
 
 # (row shapes, chunk config, widths) ladders already pre-compiled
@@ -806,7 +941,8 @@ def _warm_compact_ladder(widths, a_h, b_h, c_h, u_h, init_fn, step_fn,
 
 def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
                            max_iters: int, chunk_iters: int, linsolve: str,
-                           newton_dtype: str, compact_mode: str = "device"):
+                           newton_dtype: str, compact_mode: str = "device",
+                           mesh=None, row_axes=None):
     """The chunked stacked driver (``compact=True``).
 
     Newton steps run in chunks of ``chunk_iters``; between chunks the
@@ -831,14 +967,18 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
     dt = jnp.float64
     a, b, c, u, lb, rsc, csc = _chunk_prep(axes)(*arrs)
     n_orig = arrs[0].shape[-1]
-    widths = _ladder_widths(batch)
+    n_shards = _n_shards_of(mesh, row_axes)
+    # per-SHARD ladder: each shard compacts its own block, so the widths
+    # that matter (and compile) are local; global width = local x shards
+    widths = _ladder_widths(batch // n_shards)
     init_fn = _chunk_init()
     tol_dev = jnp.asarray(tol, dt)
     if compact_mode == "device":
         return _compact_device(
             arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths, init_fn,
             tol_dev, active, max_iters=max_iters, chunk_iters=chunk_iters,
-            linsolve=linsolve, newton_dtype=newton_dtype)
+            linsolve=linsolve, newton_dtype=newton_dtype, mesh=mesh,
+            row_axes=row_axes)
     step_fn = _chunk_stepper(chunk_iters, max_iters, linsolve, newton_dtype)
 
     a_h, b_h, c_h, u_h = (np.asarray(v) for v in (a, b, c, u))
@@ -940,7 +1080,8 @@ def _solve_stacked_compact(arrs, axes, batch: int, tol, active, *,
 
 def _compact_device(arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths,
                     init_fn, tol_dev, active, *, max_iters: int,
-                    chunk_iters: int, linsolve: str, newton_dtype: str):
+                    chunk_iters: int, linsolve: str, newton_dtype: str,
+                    mesh=None, row_axes=None):
     """Device-side compaction: the full-batch standard-form buffers stay
     resident on device in ORIGINAL row order and the carry lives at full
     width, permuted alive-rows-first.  Each chunk runs ONE fused compiled
@@ -950,16 +1091,28 @@ def _compact_device(arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths,
     the returned :class:`LPSolution` holds device arrays already in input
     row order.  All carried state uses strong dtypes — the ROADMAP's
     named pitfall — so :func:`stacked_compile_count` stays flat after the
-    first (warmed) call."""
+    first (warmed) call.
+
+    Under a ``mesh``, ``widths`` is the per-shard ladder and every fused
+    chunk/finalize program is shard_mapped over the row axes (see
+    :func:`_chunk_merge_stepper`); the permutation buffer holds
+    SHARD-LOCAL slot indices (``tile(arange(local), n_shards)``), so the
+    in-shard gathers stay in bounds and compaction never moves a row
+    across shards."""
+    n_shards = _n_shards_of(mesh, row_axes)
+    local = batch // n_shards
     merge_fns = {w: _chunk_merge_stepper(w, chunk_iters, max_iters,
-                                         linsolve, newton_dtype)
+                                         linsolve, newton_dtype,
+                                         mesh=mesh, row_axes=row_axes)
                  for w in widths}
-    fin_fn = _chunk_finalize(n_orig)
+    fin_fn = _chunk_finalize(n_orig, mesh=mesh, row_axes=row_axes,
+                             c_batched=arrs[0].ndim == 2)
     zeros = jnp.zeros((batch,), jnp.float64)
-    perm0 = jnp.arange(batch, dtype=jnp.int32)
+    perm0 = jnp.asarray(np.tile(np.arange(local, dtype=np.int32), n_shards))
 
     warm_key = ("device", tuple(a.shape[1:]), chunk_iters, max_iters,
-                linsolve, newton_dtype, tuple(widths))
+                linsolve, newton_dtype, tuple(widths),
+                _mesh_key_of(mesh, row_axes))
     if warm_key not in _WARMED_LADDERS:
         # all-retired warm call per width: zero while-loop trips, so each
         # costs one compile + microseconds; after the FIRST device-
@@ -976,7 +1129,7 @@ def _compact_device(arrs, a, b, c, u, lb, rsc, csc, batch, n_orig, widths,
     carry = init_fn(a, b, c, u, jnp.asarray(active, dtype=bool))
     rp = rd = mu = zeros
     perm = perm0
-    width = batch
+    width = local
     compact_rows = 0
     # every chunk advances every active row by >= 1 iteration, so
     # max_iters chunks always suffice; +2 pads the all-retired first call
@@ -1010,7 +1163,8 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
                      tol: float = _TOL, linsolve: str = "xla",
                      row_active=None, compact: bool = False,
                      chunk_iters=None, newton_dtype: str = "float64",
-                     compact_mode: str = "device") -> LPSolution:
+                     compact_mode: str = "device", mesh=None,
+                     row_spec=None) -> LPSolution:
     """Solve a whole stack of LPs as ONE jitted, vmapped interior-point call.
 
     Any of the seven arrays may carry a leading batch dimension (detected
@@ -1055,6 +1209,18 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
     solve, with a per-row fallback to full float64 once the barrier
     parameter is small or whenever the refined residual exceeds
     tolerance.  Convergence checks always run in float64.
+
+    ``mesh`` shards the batch (row) axis over a device mesh with
+    ``shard_map`` — rows are independent, so each shard runs the chosen
+    driver on its own block and a shard's lockstep while-loop retires as
+    soon as ITS slowest row converges.  Row placement uses the mesh's
+    ``lp_rows`` axis (:func:`repro.launch.mesh.make_solver_mesh`), its
+    ('pod', 'data') batch axes, or an explicit ``row_spec``; batches not
+    divisible by the shard count are internally padded with retired rows
+    and sliced back.  ``compact=True`` composes (the ladder becomes
+    per-shard — see docs/solver.md "Sharded megabatches");
+    ``compact_mode="host"`` does not (its NumPy round-trip has no
+    sharded layout) and raises.
     """
     dt = jnp.float64
     newton_dtype = _canon_newton_dtype(newton_dtype)
@@ -1084,56 +1250,84 @@ def solve_lp_stacked(c, a_eq, b_eq, g, h, lb, ub,
                              f"expected ({batch},)")
     row_shape = tuple(a.shape[1:] if ax == 0 else a.shape
                       for a, ax in zip(arrs, axes))
+    row_axes = _lp_row_axes(mesh, row_spec) if mesh is not None else None
+    n_shards = _n_shards_of(mesh, row_axes)
+    mesh_shape = _mesh_shape_of(mesh, row_axes)
+    mesh_key = _mesh_key_of(mesh, row_axes)
+    # pad to a shard multiple with retired first-row copies; sliced back
+    # below.  Callers that care about compile-count flatness should size
+    # their batches to the shard count themselves (the serving ladder
+    # does, via ladder_widths(n_shards=)).
+    n_req, pad = batch, (-batch) % n_shards
+    if pad:
+        arrs = tuple(jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+            if ax == 0 else a for a, ax in zip(arrs, axes))
+        active = jnp.concatenate([active, jnp.zeros((pad,), bool)])
+        batch += pad
     if compact:
         if compact_mode not in ("device", "host"):
             raise ValueError(f"unknown compact_mode {compact_mode!r}; "
                              f"expected 'device' or 'host'")
+        if mesh is not None and compact_mode == "host":
+            raise ValueError(
+                "compact_mode='host' does not compose with mesh=: the "
+                "NumPy round-trip has no sharded layout; use the default "
+                "compact_mode='device'")
         sig = ("compact", compact_mode, axes, max_iters, chunk_iters,
-               linsolve, newton_dtype, tuple(a.shape for a in arrs))
+               linsolve, newton_dtype, tuple(a.shape for a in arrs),
+               mesh_key)
         if sig not in _STACKED_SIGNATURES:
             _STACKED_SIGNATURES.add(sig)
             obs.record_compile("compact", width=batch, axes=axes,
                                max_iters=max_iters, linsolve=linsolve,
                                newton_dtype=newton_dtype, compact=True,
                                chunk_iters=chunk_iters, row_shape=row_shape,
-                               compact_mode=compact_mode)
+                               compact_mode=compact_mode,
+                               mesh_shape=mesh_shape)
         with obs.span("lp.solve_stacked", width=batch, compact=True,
                       linsolve=linsolve, newton_dtype=newton_dtype,
-                      compact_mode=compact_mode):
+                      compact_mode=compact_mode, n_shards=n_shards):
             sol, it32, bad, compact_rows = _solve_stacked_compact(
                 arrs, axes, batch, tol, active, max_iters=max_iters,
                 chunk_iters=chunk_iters, linsolve=linsolve,
-                newton_dtype=newton_dtype, compact_mode=compact_mode)
+                newton_dtype=newton_dtype, compact_mode=compact_mode,
+                mesh=mesh, row_axes=row_axes)
             _record_newton_rows(sol.iters, active, converged=sol.converged,
                                 it32=it32, bad=bad,
                                 compact_rows=compact_rows)
-        return sol
+        return LPSolution(*(f[:n_req] for f in sol)) if pad else sol
     sig = (axes, max_iters, linsolve, newton_dtype,
-           tuple(a.shape for a in arrs))
+           tuple(a.shape for a in arrs), mesh_key)
     if sig not in _STACKED_SIGNATURES:
         _STACKED_SIGNATURES.add(sig)
         obs.record_compile("stacked", width=batch, axes=axes,
                            max_iters=max_iters, linsolve=linsolve,
                            newton_dtype=newton_dtype, compact=False,
-                           chunk_iters=None, row_shape=row_shape)
+                           chunk_iters=None, row_shape=row_shape,
+                           mesh_shape=mesh_shape)
     # the span covers the (possibly compiling) dispatch AND the ledger
     # record, whose np.asarray blocks on the async device result — so
     # the measured time is real solve time, not lazy-dispatch time
     with obs.span("lp.solve_stacked", width=batch, compact=False,
-                  linsolve=linsolve, newton_dtype=newton_dtype):
-        sol, it32, bad = _stacked_solver(axes, max_iters, linsolve,
-                                         newton_dtype)(
-            jnp.asarray(tol, dt), active, *arrs)
+                  linsolve=linsolve, newton_dtype=newton_dtype,
+                  n_shards=n_shards):
+        solver = (_stacked_solver(axes, max_iters, linsolve, newton_dtype)
+                  if mesh is None else
+                  _stacked_solver_sharded(axes, max_iters, linsolve,
+                                          newton_dtype, mesh, row_axes))
+        sol, it32, bad = solver(jnp.asarray(tol, dt), active, *arrs)
         _record_newton_rows(sol.iters, active, converged=sol.converged,
                             it32=it32, bad=bad)
-    return sol
+    return LPSolution(*(f[:n_req] for f in sol)) if pad else sol
 
 
 def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                            tol: float = _TOL, linsolve: str = "xla",
                            row_active=None, compact: bool = False,
                            chunk_iters=None, newton_dtype: str = "float64",
-                           compact_mode: str = "device") -> LPSolution:
+                           compact_mode: str = "device", mesh=None,
+                           row_spec=None) -> LPSolution:
     """Stack a sequence of same-shape :class:`~repro.core.problem.NodeLP`
     relaxations (e.g. one per scenario x budget point) and solve them in a
     single batched IPM call."""
@@ -1146,13 +1340,15 @@ def solve_node_lps_stacked(nodes, *, max_iters: int = _MAX_ITERS,
                             linsolve=linsolve, row_active=row_active,
                             compact=compact, chunk_iters=chunk_iters,
                             newton_dtype=newton_dtype,
-                            compact_mode=compact_mode)
+                            compact_mode=compact_mode, mesh=mesh,
+                            row_spec=row_spec)
 
 
 def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
                             linsolve: str = "xla", compact: bool = False,
                             chunk_iters=None,
-                            newton_dtype: str = "float64") -> dict:
+                            newton_dtype: str = "float64", mesh=None,
+                            row_spec=None) -> dict:
     """The width-independent compile-attribution config that
     :func:`solve_node_lps_stacked` calls for ``node``-shaped stacks emit
     (see ``obs.record_compile``): kind + axes + solver knobs + per-row
@@ -1165,6 +1361,11 @@ def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
     the event width to be one of its ladder widths.  Deterministic, so
     a server that warmed against an already-hot jit cache (no compile
     events of its own) can still build its filter.
+
+    The filter includes the mesh identity (``mesh_shape``: row-axis
+    names and sizes, None for unsharded solves), so a query built for
+    one mesh never matches solves dispatched under a different mesh —
+    or under none.
     """
     newton_dtype = _canon_newton_dtype(newton_dtype)
     chunk_iters = (_CHUNK_ITERS if chunk_iters is None
@@ -1180,6 +1381,7 @@ def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
         "compact": bool(compact),
         "chunk_iters": chunk_iters,
         "row_shape": row_shape,
+        "mesh_shape": _mesh_shape_key(mesh, row_spec),
     }
 
 
@@ -1187,7 +1389,7 @@ def stacked_attribution_key(node, *, max_iters: int = _MAX_ITERS,
 # Width-ladder batch merging (the serving admission policy)
 # ---------------------------------------------------------------------------
 
-def ladder_widths(batch: int) -> list:
+def ladder_widths(batch: int, n_shards: int = 1) -> list:
     """Public view of the fixed buffer-width ladder for a maximum batch
     width: ``batch`` itself plus every power of two below it, descending.
 
@@ -1197,17 +1399,30 @@ def ladder_widths(batch: int) -> list:
     ladder width that holds them, so the jit cache only ever sees a
     fixed set of batch shapes and :func:`stacked_compile_count` is
     bounded by ``len(ladder_widths(ladder_max))`` per solver config.
+
+    ``n_shards`` (> 1 for mesh-sharded dispatch) makes the ladder
+    PER-SHARD: every global width is a per-shard power-of-two times the
+    shard count, so each shard's block is itself a ladder width and the
+    compiled set stays one program per local width.  ``batch`` must
+    divide evenly into shards.
     """
     if batch < 1:
         raise ValueError(f"ladder needs batch >= 1, got {batch}")
-    return _ladder_widths(int(batch))
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"ladder needs n_shards >= 1, got {n_shards}")
+    if batch % n_shards:
+        raise ValueError(f"ladder_max {batch} must be divisible by "
+                         f"n_shards {n_shards}")
+    return [w * n_shards for w in _ladder_widths(int(batch) // n_shards)]
 
 
-def next_ladder_width(n_rows: int, ladder_max: int) -> int:
-    """Smallest width in :func:`ladder_widths(ladder_max)` that holds
-    ``n_rows`` — the buffer a merged batch of ``n_rows`` LP rows is
-    padded to."""
-    widths = ladder_widths(ladder_max)
+def next_ladder_width(n_rows: int, ladder_max: int,
+                      n_shards: int = 1) -> int:
+    """Smallest width in :func:`ladder_widths(ladder_max, n_shards)`
+    that holds ``n_rows`` — the buffer a merged batch of ``n_rows`` LP
+    rows is padded to."""
+    widths = ladder_widths(ladder_max, n_shards)
     if not 1 <= n_rows <= ladder_max:
         raise ValueError(f"n_rows={n_rows} outside ladder "
                          f"[1, {ladder_max}]")
@@ -1218,7 +1433,8 @@ def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
                           max_iters: int = _MAX_ITERS, tol: float = _TOL,
                           linsolve: str = "xla", compact: bool = False,
                           chunk_iters=None, newton_dtype: str = "float64",
-                          compact_mode: str = "device") -> LPSolution:
+                          compact_mode: str = "device", mesh=None,
+                          row_spec=None) -> LPSolution:
     """Batch-merge entry point: solve up to ``ladder_max`` same-shape
     node LPs as ONE stacked call padded to a ladder width.
 
@@ -1236,10 +1452,15 @@ def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
     ``row_active`` optionally retires a subset of the real rows too
     (same semantics as :func:`solve_lp_stacked`); the ladder padding is
     appended to it.
+
+    With a ``mesh``, widths come from the PER-SHARD ladder
+    (``ladder_widths(ladder_max, n_shards)``) so each dispatched batch
+    splits evenly across shards with no internal re-padding — the
+    compile set stays one program per local width.
     """
     nodes = list(nodes)
     k = len(nodes)
-    width = next_ladder_width(k, ladder_max)
+    width = next_ladder_width(k, ladder_max, mesh_n_shards(mesh, row_spec))
     padded = nodes + [nodes[0]] * (width - k)
     active = np.zeros(width, dtype=bool)
     active[:k] = True if row_active is None else \
@@ -1248,7 +1469,8 @@ def solve_node_lps_ladder(nodes, *, ladder_max: int, row_active=None,
                                  linsolve=linsolve, row_active=active,
                                  compact=compact, chunk_iters=chunk_iters,
                                  newton_dtype=newton_dtype,
-                                 compact_mode=compact_mode)
+                                 compact_mode=compact_mode, mesh=mesh,
+                                 row_spec=row_spec)
     # slice, don't round-trip: the fields stay device arrays so callers
     # (the serving slice path) never pay a hidden NumPy transfer here
     return LPSolution(*(f[:k] for f in sol))
@@ -1258,7 +1480,8 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
                 tol: float = _TOL, linsolve: str = "xla",
                 compact: bool = False, chunk_iters=None,
                 newton_dtype: str = "float64",
-                compact_mode: str = "device") -> list:
+                compact_mode: str = "device", mesh=None,
+                row_spec=None) -> list:
     """AOT-warm every ladder width for one node-LP shape: one
     ALL-RETIRED call per width (every row starts with its ``done`` flag
     set, so the while-loop trip count is zero and each call costs one
@@ -1270,7 +1493,7 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
     :func:`stacked_compile_count` is already final.  Returns the warmed
     widths (descending).
     """
-    widths = ladder_widths(ladder_max)
+    widths = ladder_widths(ladder_max, mesh_n_shards(mesh, row_spec))
     for w in widths:
         with obs.span("lp.warm_width", width=w, linsolve=linsolve,
                       compact=compact):
@@ -1279,7 +1502,8 @@ def warm_ladder(node, ladder_max: int, *, max_iters: int = _MAX_ITERS,
                                    row_active=np.zeros(w, dtype=bool),
                                    compact=compact, chunk_iters=chunk_iters,
                                    newton_dtype=newton_dtype,
-                                   compact_mode=compact_mode)
+                                   compact_mode=compact_mode, mesh=mesh,
+                                   row_spec=row_spec)
     return widths
 
 
@@ -1289,12 +1513,14 @@ def solve_lp_batched(c, a_eq, b_eq, g, h_batch, lb, ub,
                      *, max_iters: int = _MAX_ITERS, linsolve: str = "xla",
                      compact: bool = False, chunk_iters=None,
                      newton_dtype: str = "float64",
-                     compact_mode: str = "device"):
+                     compact_mode: str = "device", mesh=None,
+                     row_spec=None):
     return solve_lp_stacked(c, a_eq, b_eq, g, h_batch, lb, ub,
                             max_iters=max_iters, linsolve=linsolve,
                             compact=compact, chunk_iters=chunk_iters,
                             newton_dtype=newton_dtype,
-                            compact_mode=compact_mode)
+                            compact_mode=compact_mode, mesh=mesh,
+                            row_spec=row_spec)
 
 
 def scipy_reference_lp(c, a_eq, b_eq, g, h, lb, ub):

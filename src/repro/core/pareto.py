@@ -121,7 +121,8 @@ def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
                         *, return_solutions: bool = False,
                         linsolve: str = "xla", compact: bool = False,
                         chunk_iters: Optional[int] = None,
-                        newton_dtype: str = "float64"):
+                        newton_dtype: str = "float64", mesh=None,
+                        row_spec=None):
     """Instant LOWER-BOUND frontier: the LP relaxation of Eq. 4 solved for
     every cost cap in ONE vmapped interior-point call (the epsilon grid
     shares the constraint matrix; only the budget rhs varies).
@@ -142,7 +143,8 @@ def relaxation_frontier(problem: AllocationProblem, caps: np.ndarray,
                                   h_batch, node.lb, node.ub,
                                   linsolve=linsolve, compact=compact,
                                   chunk_iters=chunk_iters,
-                                  newton_dtype=newton_dtype)
+                                  newton_dtype=newton_dtype, mesh=mesh,
+                                  row_spec=row_spec)
     if return_solutions:
         return caps, np.asarray(sols.obj), sols
     return caps, np.asarray(sols.obj)
@@ -205,19 +207,23 @@ def milp_tradeoff_batched(problem: AllocationProblem, n_points: int = 8,
     ``chunk_iters=`` / ``newton_dtype=`` likewise steer every stacked
     solve onto the chunked mid-call-compaction driver and/or the
     mixed-precision Newton path (see :func:`repro.core.lp.solve_lp_stacked`).
+    ``mesh=`` / ``row_spec=`` shard the big relaxation megabatch over a
+    device mesh (the narrow lockstep node batches inside B&B stay
+    unsharded — see ``_bnb_kw``).
     """
     if backend != "bnb":
         for k in ("linsolve", "early_exit", "compact", "chunk_iters",
-                  "newton_dtype"):
+                  "newton_dtype", "mesh", "row_spec"):
             kw.pop(k, None)
         return milp_tradeoff(problem, n_points, backend=backend, **kw)
-    c_l, c_u, top = cost_bounds_batched(problem, **kw)
+    c_l, c_u, top = cost_bounds_batched(problem, **_bnb_kw(kw))
     caps = np.linspace(c_l, max(c_u, c_l), n_points)
     _, lbs, sols = relaxation_frontier(problem, caps, return_solutions=True,
                                        **_stacked_solve_kw(kw))
     xs = np.asarray(sols.x)
     relax_allocs = [problem.split_node_x(xs[k])[0] for k in range(len(caps))]
-    points = _warm_sweep(problem, caps, lbs, relax_allocs, top, **kw)
+    points = _warm_sweep(problem, caps, lbs, relax_allocs, top,
+                         **_bnb_kw(kw))
     points.append(TradeoffPoint(None, top.makespan, top.cost, top.alloc,
                                 dict(status=top.status, nodes=top.nodes,
                                      lb=top.lower_bound)))
@@ -322,12 +328,15 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks,
                                  linsolve: str = "xla",
                                  compact: bool = False,
                                  chunk_iters: Optional[int] = None,
-                                 newton_dtype: str = "float64"):
+                                 newton_dtype: str = "float64",
+                                 mesh=None, row_spec=None):
     """One stacked IPM call across every (scenario, budget) pair.
 
     Returns (lbs (S, K), relax_allocs (S, K) list-of-lists).  Dead
     platforms are pinned to zero allocation via the node's variable
-    bounds, not just the latency penalty.
+    bounds, not just the latency penalty.  ``mesh`` shards the
+    (scenario x budget) row axis over a device mesh — this megabatch is
+    exactly the embarrassingly row-parallel workload sharding targets.
     """
     from repro.core import lp as lpmod
     nodes = []
@@ -336,7 +345,8 @@ def _batched_scenario_relaxation(probs, caps_list, dead_masks,
     sols = lpmod.solve_node_lps_stacked(nodes, linsolve=linsolve,
                                         compact=compact,
                                         chunk_iters=chunk_iters,
-                                        newton_dtype=newton_dtype)
+                                        newton_dtype=newton_dtype,
+                                        mesh=mesh, row_spec=row_spec)
     s, k = len(probs), len(caps_list[0])
     lbs = np.asarray(sols.obj).reshape(s, k)
     xs = np.asarray(sols.x).reshape(s, k, -1)
@@ -351,7 +361,15 @@ def _stacked_solve_kw(kw: dict) -> dict:
     return dict(linsolve=kw.get("linsolve", "xla"),
                 compact=kw.get("compact", False),
                 chunk_iters=kw.get("chunk_iters"),
-                newton_dtype=kw.get("newton_dtype", "float64"))
+                newton_dtype=kw.get("newton_dtype", "float64"),
+                mesh=kw.get("mesh"), row_spec=kw.get("row_spec"))
+
+
+# kwargs safe to forward to the B&B engine: mesh sharding steers only the
+# big stacked relaxation megabatches — the lockstep node batches inside
+# solve_bnb_sweep are narrow (batch_width rows) and stay unsharded
+def _bnb_kw(kw: dict) -> dict:
+    return {k: v for k, v in kw.items() if k not in ("mesh", "row_spec")}
 
 
 def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
@@ -359,7 +377,8 @@ def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
                                   linsolve: str = "xla",
                                   compact: bool = False,
                                   chunk_iters: Optional[int] = None,
-                                  newton_dtype: str = "float64"):
+                                  newton_dtype: str = "float64",
+                                  mesh=None, row_spec=None):
     """LP-relaxation (lower-bound) frontier per scenario, ALL scenarios
     and budget points solved in a single batched interior-point call.
 
@@ -374,7 +393,7 @@ def scenario_relaxation_frontiers(problem: AllocationProblem, scenarios,
     lbs, _ = _batched_scenario_relaxation(
         probs, caps_list, [s.dead for s in scen], linsolve=linsolve,
         compact=compact, chunk_iters=chunk_iters,
-        newton_dtype=newton_dtype)
+        newton_dtype=newton_dtype, mesh=mesh, row_spec=row_spec)
     return {s.name: (caps_list[i], lbs[i]) for i, s in enumerate(scen)}
 
 
@@ -389,7 +408,7 @@ def scenario_frontiers(problem: AllocationProblem, scenarios,
     """
     scen = _as_scenario_set(scenarios)
     probs = scen.problems(problem)
-    bounds = [cost_bounds_batched(p, **kw) for p in probs]
+    bounds = [cost_bounds_batched(p, **_bnb_kw(kw)) for p in probs]
     caps_list = [np.linspace(c_l, max(c_u, c_l), n_points)
                  for c_l, c_u, _ in bounds]
     lbs, relax_allocs = _batched_scenario_relaxation(
@@ -398,7 +417,7 @@ def scenario_frontiers(problem: AllocationProblem, scenarios,
     for i, s in enumerate(scen):
         c_l, c_u, top = bounds[i]
         points = _warm_sweep(probs[i], caps_list[i], lbs[i],
-                             relax_allocs[i], top, **kw)
+                             relax_allocs[i], top, **_bnb_kw(kw))
         points.append(TradeoffPoint(None, top.makespan, top.cost, top.alloc,
                                     dict(status=top.status, nodes=top.nodes,
                                          lb=top.lower_bound)))

@@ -20,3 +20,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for CPU tests (requires forced host device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_solver_mesh(n_rows_axis: int | None = None):
+    """1-D mesh for stacked-IPM row megabatches (`lp_rows` axis).
+
+    Default: every visible device.  LP rows are embarrassingly
+    data-parallel, so the solver mesh has no model axis — pass the
+    result to ``lp.solve_lp_stacked(mesh=)`` /
+    ``serving.AllocationServer(mesh=)``.
+    """
+    n = len(jax.devices()) if n_rows_axis is None else int(n_rows_axis)
+    return jax.make_mesh((n,), ("lp_rows",))

@@ -295,15 +295,15 @@ def _episode_fn(policy_kind: str, n_weights: int):
 
 def _record_fused_compile(policy_kind: str, n_weights: int, s: int,
                           tau: int, k: int, n_events: int,
-                          n_episodes: int) -> None:
+                          n_episodes: int, mesh_shape=None) -> None:
     sig = ("episode", policy_kind, n_weights, s, tau, k, n_events,
-           n_episodes)
+           n_episodes, mesh_shape)
     if sig not in _FUSED_SIGNATURES:
         _FUSED_SIGNATURES.add(sig)
         obs.record_compile("episode", policy=policy_kind,
                            n_weights=n_weights, slots=s, tau=tau,
                            catalog=k, n_events=n_events,
-                           n_episodes=n_episodes)
+                           n_episodes=n_episodes, mesh_shape=mesh_shape)
 
 
 def run_episode_fused(catalog, n, episode: MarketEpisode, *,
@@ -348,59 +348,121 @@ def run_episodes_vmapped(catalog, n, episodes: Sequence[MarketEpisode], *,
                          policy_kind: str, slo_latencies,
                          alloc0s, n_weights: int = 9,
                          tensors: Optional[Sequence[EventTensor]] = None,
-                         policy_name: Optional[str] = None
+                         policy_name: Optional[str] = None,
+                         episode_chunk: Optional[int] = None,
+                         mesh=None, row_spec=None
                          ) -> Tuple[FusedTotals, ...]:
     """Replay a whole episode SUITE as one vmapped device call — the
     Monte-Carlo risk engine: 10^3+ sampled traces per policy in a single
     compiled program.  ``slo_latencies`` and ``alloc0s`` are per-episode
-    (the t=0 plans come from the host policy reset)."""
+    (the t=0 plans come from the host policy reset).
+
+    ``episode_chunk`` bounds device residency for 10^4+ trace suites:
+    the episode axis is dispatched in fixed-size vmap chunks (the last
+    chunk padded by repeating its final episode, so the jit cache sees
+    ONE batch shape), with per-chunk host transfer of the five scalar
+    totals.  Episodes are independent, so chunked == unchunked exactly.
+
+    ``mesh`` (+ optional ``row_spec``) shards the episode axis over a
+    device mesh with ``shard_map`` — episodes are embarrassingly
+    parallel, so the fused scan runs per-shard with zero collectives;
+    dispatch widths are padded to a shard multiple.
+    """
     episodes = list(episodes)
     tensors = (list(tensors) if tensors is not None
                else list(ev.stack_event_tensors(episodes)))
-    widths = {t.time.shape[0] for t in tensors}
-    if len(widths) != 1:
+    evwidths = {t.time.shape[0] for t in tensors}
+    if len(evwidths) != 1:
         raise ValueError("tensors not padded to a common event count; "
                          "use events.stack_event_tensors")
+    n_eps = len(episodes)
+    if episode_chunk is not None and int(episode_chunk) < 1:
+        raise ValueError(f"episode_chunk must be >= 1, "
+                         f"got {episode_chunk}")
+    chunk = n_eps if episode_chunk is None else min(int(episode_chunk),
+                                                   n_eps)
     n_weights = _norm_weights(policy_kind, n_weights)
     cat = fused_catalog(catalog, n)
     fn = _episode_fn(policy_kind, n_weights)
-    key = ("episode-vmap", policy_kind, n_weights)
+    if mesh is not None:
+        from repro.core import lp as lpmod
+        row_axes = lpmod._lp_row_axes(mesh, row_spec)
+        n_shards = lpmod._n_shards_of(mesh, row_axes)
+        mesh_shape = lpmod._mesh_shape_of(mesh, row_axes)
+        mesh_key = lpmod._mesh_key_of(mesh, row_axes)
+    else:
+        row_axes, n_shards, mesh_shape, mesh_key = None, 1, None, None
+    # ONE dispatch width for the whole suite: the chunk rounded up to a
+    # shard multiple — remainder chunks re-pad to it instead of
+    # compiling a second shape
+    width = -(-chunk // n_shards) * n_shards
+    key = ("episode-vmap", policy_kind, n_weights, mesh_key)
     vfn = _FUSED_REPLAYS.get(key)
     if vfn is None:
-        vfn = jax.jit(jax.vmap(fn, in_axes=(None,) * 5 + (0,) * 10))
+        vf = jax.vmap(fn, in_axes=(None,) * 5 + (0,) * 10)
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as PS
+
+            from repro.runtime.sharding import shard_map_compat
+            rspec = lpmod._row_pspec(row_axes)
+            vf = shard_map_compat(vf, mesh=mesh,
+                                  in_specs=(PS(),) * 5 + (rspec,) * 10,
+                                  out_specs=rspec, check_rep=False)
+        vfn = jax.jit(vf)
         _FUSED_REPLAYS[key] = vfn
     _record_fused_compile(policy_kind, n_weights, tensors[0].n_slots,
                           int(cat[4].shape[0]), len(catalog),
-                          int(widths.pop()), len(episodes))
-    stack = [jnp.asarray(np.stack([getattr(t, f) for t in tensors]))
+                          int(evwidths.pop()), width,
+                          mesh_shape=mesh_shape)
+    # host-side stacks; each dispatch moves only ``width`` episodes to
+    # device (the whole point of the memory-aware chunking)
+    stack = [np.stack([getattr(t, f) for t in tensors])
              for f in ("time", "kind_id", "slot", "kind_index", "scale",
                        "init_occupied", "init_kind")]
-    slos = jnp.asarray(np.asarray(slo_latencies, dtype=np.float64))
-    horizons = jnp.asarray(np.array([t.horizon_s for t in tensors]))
-    alloc0s = jnp.asarray(np.stack([np.asarray(a, dtype=np.float64)
-                                    for a in alloc0s]))
+    slos = np.asarray(slo_latencies, dtype=np.float64)
+    horizons = np.array([t.horizon_s for t in tensors])
+    alloc0s = np.stack([np.asarray(a, dtype=np.float64) for a in alloc0s])
+    batched = [slos, horizons] + stack + [alloc0s]
+    cost = np.zeros(n_eps)
+    avg_mk = np.zeros(n_eps)
+    viol_s = np.zeros(n_eps)
+    viol_n = np.zeros(n_eps, dtype=np.int64)
+    replans = np.zeros(n_eps, dtype=np.int64)
     with obs.span("market.episodes_vmapped", policy=policy_kind,
-                  n_episodes=len(episodes)):
-        out = jax.device_get(vfn(*cat, slos, horizons, *stack[:5],
-                                 *stack[5:], alloc0s))
-    obs.update(counters={"market.fused_episodes": len(episodes)})
-    cost, avg_mk, viol_s, viol_n, replans = out
+                  n_episodes=n_eps, chunk=width, n_shards=n_shards):
+        for lo in range(0, n_eps, chunk):
+            hi = min(lo + chunk, n_eps)
+            take = np.arange(lo, hi)
+            if take.size < width:      # pad by repeating the last episode
+                take = np.concatenate(
+                    [take, np.full(width - take.size, hi - 1)])
+            out = jax.device_get(vfn(*cat,
+                                     *(jnp.asarray(v[take])
+                                       for v in batched)))
+            k = hi - lo
+            for dst, src in zip((cost, avg_mk, viol_s, viol_n, replans),
+                                out):
+                dst[lo:hi] = src[:k]
+    obs.update(counters={"market.fused_episodes": n_eps})
     name = policy_name or policy_kind
     return tuple(
         FusedTotals(name, episodes[i].seed, tensors[i].horizon_s,
                     float(slos[i]), float(cost[i]), float(avg_mk[i]),
                     float(viol_s[i]), int(viol_n[i]), int(replans[i]))
-        for i in range(len(episodes)))
+        for i in range(n_eps))
 
 
 def run_suite_fused(catalog, n, episodes: Sequence[MarketEpisode],
                     policy, slo_latencies: Sequence[float], *,
-                    tensors: Optional[Sequence[EventTensor]] = None
-                    ) -> Tuple[FusedTotals, ...]:
+                    tensors: Optional[Sequence[EventTensor]] = None,
+                    episode_chunk: Optional[int] = None, mesh=None,
+                    row_spec=None) -> Tuple[FusedTotals, ...]:
     """Score one policy across a trace suite: host-side ``reset`` per
     episode (resets may run a full MILP), then ONE vmapped device replay
     for every replan.  The policy must expose a ``fused_spec()``
-    (see :class:`repro.market.policies.Policy`)."""
+    (see :class:`repro.market.policies.Policy`).  ``episode_chunk`` /
+    ``mesh`` / ``row_spec`` pass through to
+    :func:`run_episodes_vmapped`."""
     spec = policy.fused_spec()
     if spec is None:
         raise ValueError(f"policy {policy.name!r} has no fused port; "
@@ -414,7 +476,9 @@ def run_suite_fused(catalog, n, episodes: Sequence[MarketEpisode],
     return run_episodes_vmapped(catalog, n, episodes, policy_kind=kind,
                                 slo_latencies=slo_latencies,
                                 alloc0s=alloc0s, n_weights=n_weights,
-                                tensors=tensors, policy_name=policy.name)
+                                tensors=tensors, policy_name=policy.name,
+                                episode_chunk=episode_chunk, mesh=mesh,
+                                row_spec=row_spec)
 
 
 def fused_compile_count() -> int:

@@ -4,7 +4,11 @@ Single place that decides the parallelism layout:
   * params: vocab/heads/mlp/experts -> 'model' (TP/EP), layers unsharded;
   * activations: batch -> ('pod','data'); optionally seq -> 'data'
     (context parallelism for the long_500k decode cells, where batch=1
-    cannot use the data axis).
+    cannot use the data axis);
+  * LP megabatches: the stacked-IPM row axis -> 'lp_rows' on a solver
+    mesh (:func:`repro.launch.mesh.make_solver_mesh`), falling back to
+    the ('pod', 'data') batch axes on a production mesh — see
+    :func:`lp_row_axes` and ``repro.core.lp.solve_lp_stacked(mesh=)``.
 """
 from __future__ import annotations
 
@@ -13,6 +17,24 @@ from typing import Dict, Tuple
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
+
+# jax.shard_map graduated from jax.experimental in jax 0.5 (and renamed
+# its replication-check kwarg check_rep -> check_vma); support both.
+if hasattr(jax, "shard_map"):
+    _SHARD_MAP, _CHECK_KW = jax.shard_map, "check_vma"
+else:                                        # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+    _SHARD_MAP, _CHECK_KW = _experimental_sm, "check_rep"
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_rep=True):
+    """Version-stable :func:`jax.shard_map` wrapper (the ``check_rep``
+    kwarg was renamed ``check_vma`` when shard_map left experimental).
+    The stacked-IPM wrappers pass ``check_rep=False``: the per-shard
+    program contains ``lax.while_loop``s, which the replication checker
+    has no rule for."""
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_rep})
 
 
 def logical_rules(mesh, *, shard_seq: bool = False, mode: str = "train"
@@ -42,12 +64,54 @@ def logical_rules(mesh, *, shard_seq: bool = False, mode: str = "train"
         # activation axes
         "batch": batch if len(batch) > 1 else (batch[0] if batch else None),
         "act_seq": "data" if (shard_seq and "data" in axes) else None,
+        # stacked-IPM row megabatches: a dedicated solver mesh carries an
+        # 'lp_rows' axis; on a production mesh the rows ride the data axes
+        "lp_rows": ("lp_rows" if "lp_rows" in axes
+                    else (batch if len(batch) > 1
+                          else (batch[0] if batch else None))),
     }
     return rules
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def lp_row_axes(mesh, row_spec=None) -> Tuple[str, ...]:
+    """Mesh axes carrying the stacked-IPM row (batch) dimension.
+
+    ``row_spec`` overrides the rule table: a mesh axis name, a tuple of
+    axis names, or a ``PartitionSpec`` whose first entry names the row
+    axes.  Without it, a dedicated solver mesh's ``lp_rows`` axis wins,
+    else the ('pod', 'data') activation-batch axes of a production mesh.
+    """
+    if row_spec is not None:
+        if isinstance(row_spec, PS):
+            row_spec = row_spec[0] if len(row_spec) else None
+        if row_spec is None:
+            axes: Tuple[str, ...] = ()
+        elif isinstance(row_spec, str):
+            axes = (row_spec,)
+        else:
+            axes = tuple(row_spec)
+    else:
+        rule = logical_rules(mesh)["lp_rows"]
+        if rule is None:
+            axes = ()
+        elif isinstance(rule, str):
+            axes = (rule,)
+        else:
+            axes = tuple(rule)
+    missing = [a for a in axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"row axes {missing} not in mesh axes {mesh.axis_names}")
+    if not axes:
+        raise ValueError(
+            "mesh has no row axis for LP megabatches: expected an "
+            "'lp_rows' axis (make_solver_mesh) or ('pod','data') batch "
+            "axes, or pass row_spec= explicitly")
+    return axes
 
 
 def batch_sharding(mesh, shape, *, shard_seq: bool = False,

@@ -121,22 +121,37 @@ class AllocationServer:
     requests must share one node-LP shape (same ``(mu, tau)``): the
     shape locks on warmup or first dispatch, and a mismatched submit
     raises rather than recompiling.
+
+    ``mesh`` (+ optional ``row_spec``) shards every dispatched stacked
+    solve over a device mesh: the admission ladder becomes PER-SHARD
+    (``ladder_widths(ladder_max, n_shards)`` — every dispatched width
+    splits evenly across shards), warmup AOT-compiles the sharded
+    programs, and :attr:`recompiles_since_warmup` keeps its exact
+    attribution through the ``mesh_shape`` compile-event key.
+    ``ladder_max`` must be divisible by the mesh's shard count.
     """
 
     def __init__(self, *, ladder_max: int = 16, linsolve: str = "xla",
                  compact: bool = False, chunk_iters: Optional[int] = None,
                  newton_dtype: str = "float64",
                  max_iters: Optional[int] = None, tol: Optional[float] = None,
-                 stats_window: int = 4096):
+                 stats_window: int = 4096, mesh=None, row_spec=None):
         if ladder_max < 1:
             raise ValueError(f"ladder_max must be >= 1, got {ladder_max}")
         if stats_window < 1:
             raise ValueError(
                 f"stats_window must be >= 1, got {stats_window}")
         self.ladder_max = int(ladder_max)
+        self._n_shards = lp.mesh_n_shards(mesh, row_spec)
+        if self.ladder_max % self._n_shards:
+            raise ValueError(
+                f"ladder_max {self.ladder_max} must be divisible by the "
+                f"mesh's {self._n_shards} row shards (the ladder is "
+                f"per-shard under sharded dispatch)")
         self._solve_kw = dict(linsolve=linsolve, compact=compact,
                               chunk_iters=chunk_iters,
-                              newton_dtype=newton_dtype)
+                              newton_dtype=newton_dtype,
+                              mesh=mesh, row_spec=row_spec)
         if max_iters is not None:
             self._solve_kw["max_iters"] = int(max_iters)
         if tol is not None:
@@ -217,7 +232,7 @@ class AllocationServer:
             return None
         match = dict(self._attr_match)
         kind = match.pop("kind")
-        widths = set(lp.ladder_widths(self.ladder_max))
+        widths = set(lp.ladder_widths(self.ladder_max, self._n_shards))
         events = obs.compile_events(kind=kind, since_seq=self._warm_seq,
                                     **match)
         return sum(1 for ev in events if ev.config.get("width") in widths)
@@ -306,7 +321,8 @@ class AllocationServer:
                 for r in reqs:
                     nodes.extend(pareto.frontier_nodes(r.problem, r.caps,
                                                        r.dead))
-                width = lp.next_ladder_width(len(nodes), self.ladder_max)
+                width = lp.next_ladder_width(len(nodes), self.ladder_max,
+                                             self._n_shards)
             dsp.set(width=width, rows=len(nodes))
             t0 = time.perf_counter()
             with obs.span("serving.solve", width=width, rows=len(nodes)):

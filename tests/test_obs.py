@@ -212,6 +212,43 @@ def test_compile_events_filtering():
     assert obs.compile_count(since_seq=obs.last_seq()) == 0
 
 
+def test_compile_events_disambiguate_mesh_from_unsharded():
+    """The attribution gap: every stacked signature records its mesh in
+    the config (``mesh_shape``), so a query built for one mesh can never
+    silently match solves run under a different mesh — or no mesh.  A
+    1-device mesh still takes the sharded code path, so this regression
+    test runs in the tier-1 (single-CPU) suite."""
+    from repro.launch.mesh import make_solver_mesh
+    p = _problem(41, mu=3, tau=8)                  # fresh shape
+    nodes = pareto.frontier_nodes(p, _caps(p, 3))
+    mesh = make_solver_mesh()
+    mark = obs.last_seq()
+    lp.solve_node_lps_stacked(nodes)
+    lp.solve_node_lps_stacked(nodes, mesh=mesh)
+    evs = obs.compile_events(kind="stacked", since_seq=mark)
+    assert len(evs) == 2                           # distinct jit keys
+    shapes = {ev.config["mesh_shape"] for ev in evs}
+    n_dev = lp.mesh_n_shards(mesh)
+    assert shapes == {None, (("lp_rows", n_dev),)}
+    # filters select exactly one side each — never both
+    assert obs.compile_count(kind="stacked", since_seq=mark,
+                             mesh_shape=None) == 1
+    assert obs.compile_count(kind="stacked", since_seq=mark,
+                             mesh_shape=(("lp_rows", n_dev),)) == 1
+    # a mesh that never ran matches nothing
+    assert obs.compile_count(kind="stacked", since_seq=mark,
+                             mesh_shape=(("lp_rows", n_dev + 1),)) == 0
+    # attribution keys carry the same field on both sides
+    assert lp.stacked_attribution_key(nodes[0])["mesh_shape"] is None
+    assert lp.stacked_attribution_key(
+        nodes[0], mesh=mesh)["mesh_shape"] == (("lp_rows", n_dev),)
+    # warm caches on both sides: re-solving records nothing
+    mark2 = obs.last_seq()
+    lp.solve_node_lps_stacked(nodes)
+    lp.solve_node_lps_stacked(nodes, mesh=mesh)
+    assert obs.compile_count(since_seq=mark2) == 0
+
+
 def test_stacked_solve_records_attributable_compile_events():
     """A fresh stacked shape records exactly one compile event carrying
     the solve config; re-solving the same shape records none."""

@@ -1,0 +1,200 @@
+"""Sharded stacked-IPM parity battery (forced 8-device CPU mesh).
+
+Run standalone with the device count forced BEFORE jax initialises:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_shard.py
+
+In the tier-1 suite (1 CPU device, jax already imported by earlier
+modules) every test here SKIPS — the CI shard job runs this file in its
+own process with the flag set.  The module sets the flag itself when it
+gets imported before jax (e.g. ``pytest tests/test_shard.py`` alone).
+
+Covers: sharded vs single-device parity across widths / row_active
+masks / compact modes, internal padding to shard multiples, compile-
+count flatness on repeat sharded calls, mesh-vs-unsharded jit-cache
+separation, per-shard ladder admission, and the host-compaction +
+mesh rejection.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:          # must precede jax's backend init
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import lp
+from repro.launch.mesh import make_solver_mesh
+from tests.test_compact import _skewed_stack
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 (forced) CPU devices; run this file standalone "
+           "with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_solver_mesh()
+
+
+def _parity(a, b, tol=1e-8):
+    """Max |obj| gap over rows converged on BOTH sides (the repo-wide
+    parity contract: a residual-classified non-convergence is a
+    diagnostic iterate, not an answer).  Fast-converging rows are
+    numerically stable and must agree on the converged FLAG too; a
+    borderline straggler may flip classification between the sharded
+    and unsharded executables (different codegen, last-ulp trajectory
+    split) — same allowance test_compact grants the chunked driver."""
+    conv_a = np.asarray(a.converged)
+    conv_b = np.asarray(b.converged)
+    conv = conv_a & conv_b
+    assert conv.any()
+    gap = np.abs(np.asarray(a.obj) - np.asarray(b.obj))[conv].max()
+    assert gap <= tol, f"parity {gap:.2e} > {tol:g}"
+    fast = (np.asarray(a.iters) <= 20) & (np.asarray(b.iters) <= 20)
+    assert (conv_a[fast] == conv_b[fast]).all()
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs single-device parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_easy,n_hard", [(15, 1), (30, 2), (62, 2)])
+def test_monolithic_parity_across_widths(mesh, n_easy, n_hard):
+    stacked, _ = _skewed_stack(n_easy=n_easy, n_hard=n_hard, seed0=11)
+    single = lp.solve_lp_stacked(*stacked)
+    shard = lp.solve_lp_stacked(*stacked, mesh=mesh)
+    _parity(single, shard)
+
+
+def test_parity_with_internal_padding(mesh):
+    """A batch NOT divisible by the shard count is padded internally
+    with retired rows and sliced back — callers see their own width."""
+    stacked, batch = _skewed_stack(n_easy=19, n_hard=2, seed0=23)  # 21
+    assert batch % 8 != 0
+    single = lp.solve_lp_stacked(*stacked)
+    shard = lp.solve_lp_stacked(*stacked, mesh=mesh)
+    assert np.asarray(shard.x).shape[0] == batch
+    _parity(single, shard)
+
+
+def test_parity_with_row_active_mask(mesh):
+    stacked, batch = _skewed_stack(n_easy=14, n_hard=2, seed0=31)
+    active = np.ones(batch, bool)
+    active[1::3] = False
+    single = lp.solve_lp_stacked(*stacked, row_active=active)
+    shard = lp.solve_lp_stacked(*stacked, row_active=active, mesh=mesh)
+    conv = np.asarray(single.converged) & np.asarray(shard.converged)
+    gap = np.abs(np.asarray(single.obj)
+                 - np.asarray(shard.obj))[conv & active].max()
+    assert gap <= 1e-8
+    # retired rows stay retired on both paths
+    assert not np.asarray(shard.iters)[~active].any()
+
+
+def test_device_compact_parity(mesh):
+    stacked, _ = _skewed_stack(n_easy=30, n_hard=2, seed0=47)
+    single = lp.solve_lp_stacked(*stacked, compact=True,
+                                 compact_mode="device")
+    shard = lp.solve_lp_stacked(*stacked, compact=True,
+                                compact_mode="device", mesh=mesh)
+    _parity(single, shard)
+
+
+def test_host_compaction_under_mesh_rejected(mesh):
+    """Host-side compaction gathers across the global batch on the host
+    — incompatible with shard-resident buffers, so it must raise rather
+    than silently desync."""
+    stacked, _ = _skewed_stack(n_easy=7, n_hard=1, seed0=5)
+    with pytest.raises(ValueError, match="host"):
+        lp.solve_lp_stacked(*stacked, compact=True, compact_mode="host",
+                            mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Compile-count discipline
+# ---------------------------------------------------------------------------
+
+def test_sharded_repeat_calls_compile_nothing(mesh):
+    stacked, _ = _skewed_stack(n_easy=15, n_hard=1, seed0=53)
+    lp.solve_lp_stacked(*stacked, mesh=mesh)                     # warm
+    count = lp.stacked_compile_count()
+    seq = obs.last_seq()
+    for _ in range(3):
+        lp.solve_lp_stacked(*stacked, mesh=mesh)
+    assert lp.stacked_compile_count() == count
+    assert obs.compile_events(since_seq=seq) == []
+
+
+def test_mesh_and_unsharded_use_distinct_jit_keys(mesh):
+    """The same shapes under a mesh and without one are different
+    executables: warming one must not hide the other's compile, and the
+    events are distinguished by the ``mesh_shape`` config key."""
+    # width 48: used by NO other test in this file, so both compiles
+    # happen here even when the whole battery runs in one process
+    stacked, _ = _skewed_stack(n_easy=46, n_hard=2, seed0=61)
+    seq = obs.last_seq()
+    lp.solve_lp_stacked(*stacked)
+    n_unsharded = len(obs.compile_events(since_seq=seq))
+    assert n_unsharded >= 1
+    lp.solve_lp_stacked(*stacked, mesh=mesh)
+    new = obs.compile_events(since_seq=seq)[n_unsharded:]
+    assert new, "sharded solve silently reused the unsharded executable"
+    assert all(e.config["mesh_shape"] == (("lp_rows", 8),) for e in new)
+    assert all(e.config["mesh_shape"] is None
+               for e in obs.compile_events(since_seq=seq)[:n_unsharded])
+
+
+# ---------------------------------------------------------------------------
+# Per-shard ladder admission
+# ---------------------------------------------------------------------------
+
+def test_ladder_widths_per_shard():
+    base = lp.ladder_widths(8)
+    assert lp.ladder_widths(64, n_shards=8) == [w * 8 for w in base]
+    # every global width divides evenly over the shards
+    assert all(w % 8 == 0 for w in lp.ladder_widths(64, n_shards=8))
+    with pytest.raises(ValueError):
+        lp.ladder_widths(20, n_shards=8)           # not a shard multiple
+
+
+def test_next_ladder_width_per_shard():
+    widths = lp.ladder_widths(64, n_shards=8)      # descending
+    assert widths == [64, 32, 16, 8]
+    # per-shard admission never hands out a width below the shard count
+    assert lp.next_ladder_width(1, 64, 8) == min(widths) == 8
+    assert lp.next_ladder_width(9, 64, 8) == 16
+    assert lp.next_ladder_width(64, 64, 8) == 64
+    assert all(lp.next_ladder_width(k, 64, 8) % 8 == 0
+               for k in range(1, 65))
+
+
+def test_ladder_solve_parity_at_per_shard_widths(mesh):
+    from repro.core import pareto
+    from tests.test_milp import random_problem
+    p = random_problem(7, 4, 5)
+    caps = np.linspace(float(p.single_platform_cost().min()),
+                       float(p.single_platform_cost().min()) * 3, 5)
+    nodes = pareto.frontier_nodes(p, caps)
+    single = lp.solve_node_lps_ladder(nodes, ladder_max=16)
+    shard = lp.solve_node_lps_ladder(nodes, ladder_max=16, mesh=mesh)
+    conv = np.asarray(single.converged) & np.asarray(shard.converged)
+    gap = np.abs(np.asarray(single.obj)
+                 - np.asarray(shard.obj))[conv].max()
+    assert gap <= 1e-8
+    assert np.asarray(shard.x).shape[0] == len(nodes)
+
+
+def test_server_rejects_indivisible_ladder(mesh):
+    from repro.serving import AllocationServer
+    with pytest.raises(ValueError, match="ladder_max"):
+        AllocationServer(ladder_max=12, mesh=mesh)   # 12 % 8 != 0
+    srv = AllocationServer(ladder_max=16, mesh=mesh)
+    assert srv._n_shards == 8

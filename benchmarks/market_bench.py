@@ -109,8 +109,10 @@ def run() -> list:
     walls = {}
     recompiled = []
     penalties = {}
+    slos = {}
     for episode in episodes:
         slo, penalties[episode.seed] = _slo_for(catalog, n, episode)
+        slos[episode.seed] = slo
         t0 = time.perf_counter()
         oracle_results.append(msim.run_episode(
             catalog, n, episode, oracle, slo_latency=slo))
@@ -128,6 +130,9 @@ def run() -> list:
             if not res.no_recompile:
                 recompiled.append((policy.name, episode.seed))
 
+    # per-interval clairvoyant table: DIAGNOSTIC lower bound only —
+    # policies can legitimately beat it (negative regret); the headline
+    # contract is the whole-horizon table below (docs/market.md)
     table = mmetrics.regret_table(results, oracle_results,
                                   sla_penalty_rate=penalties)
     for name, row in table.items():
@@ -136,12 +141,47 @@ def run() -> list:
             f"cost_regret={row['cost_regret']:.4f};"
             f"makespan_regret={row['makespan_regret']:.2f};"
             f"slo_excess_s={row['slo_excess_s']:.1f};"
-            f"replans={row['replans']:.1f}"))
+            f"replans={row['replans']:.1f};oracle=per_interval"))
     oracle_cost = float(np.mean(
         [mmetrics.summarise(r).accrued_cost for r in oracle_results]))
     rows.append(("market.policy.oracle",
                  walls["oracle"] * 1e6 / len(episodes),
-                 f"accrued_cost={oracle_cost:.4f};episodes={len(episodes)}"))
+                 f"accrued_cost={oracle_cost:.4f};episodes={len(episodes)};"
+                 f"diagnostic=per_interval_lower_bound"))
+
+    # -- whole-horizon DP oracle: the honest regret yardstick ------------
+    # every realised run (policies AND the per-interval clairvoyant)
+    # folds into each episode's DP move set via paths=, so cost_regret
+    # is >= 0 by construction for every row below (asserted)
+    from repro.market import oracle as morc
+    runs_by_seed = {}
+    for r in results + oracle_results:
+        runs_by_seed.setdefault(r.episode_seed, []).append(r)
+    wh_oracles = {}
+    t0 = time.perf_counter()
+    for episode in episodes:
+        wh_oracles[episode.seed] = morc.whole_horizon_oracle(
+            catalog, n, episode, slo_latency=slos[episode.seed],
+            sla_penalty_rate=penalties[episode.seed],
+            paths=runs_by_seed[episode.seed])
+    walls["dp_oracle"] = time.perf_counter() - t0
+    wh_table = mmetrics.whole_horizon_regret_table(
+        results, wh_oracles, sla_penalty_rate=penalties)
+    wh_cost = float(np.mean([o.total_cost for o in wh_oracles.values()]))
+    tol = 1e-9 * max(1.0, abs(wh_cost))
+    for name, row in wh_table.items():
+        assert row["cost_regret"] >= -tol, (
+            f"{name} beat the whole-horizon oracle "
+            f"({row['cost_regret']:.6f}) — the DP move set lost a path")
+        rows.append((
+            f"market.wh_regret.{name}", walls[name] * 1e6 / len(episodes),
+            f"cost_regret={row['cost_regret']:.4f};"
+            f"makespan_regret={row['makespan_regret']:.2f};"
+            f"slo_excess_s={row['slo_excess_s']:.1f};nonneg=True"))
+    rows.append(("market.wh_regret.oracle",
+                 walls["dp_oracle"] * 1e6 / len(episodes),
+                 f"total_cost={wh_cost:.4f};episodes={len(episodes)};"
+                 f"lp_rows={sum(o.n_lp_rows for o in wh_oracles.values())}"))
 
     # -- acceptance assertions -------------------------------------------
     # (a) warm-started MILP replanning strictly beats the heuristic
@@ -261,16 +301,57 @@ def run_fused() -> list:
                  f"replans={fused_t.replans};"
                  f"events={len(episode.events)}"))
 
+    # -- adversarial megadiversity suite: committed digest ---------------
+    # the seed-deterministic fingerprint of the megadiverse episode
+    # battery (correlated price shocks, preemption storms, capacity
+    # droughts, tenant contention) — gated so a generator change that
+    # silently re-rolls the adversarial traces fails CI
+    mega_eps = mev.megadiverse_episodes(
+        [k.name for k in catalog], n_episodes=smoke_scaled(6, 4),
+        horizon_s=3600.0, seed=seeded(0),
+        n_initial=min(3, len(catalog)),
+        max_platforms=smoke_scaled(8, 6))
+    mega_kinds = sorted({e.kind for ep in mega_eps for e in ep.events})
+    rows.append(("market.events.megadiverse_digest", 0.0,
+                 f"digest={mev.suite_digest(mega_eps)};"
+                 f"episodes={len(mega_eps)};kinds={len(mega_kinds)}"))
+
+    # -- whole-horizon DP oracle wall ------------------------------------
+    # one megadiverse trace, solved twice: the second solve reuses every
+    # compiled stacked-IPM shape, so it times the DP itself
+    from repro.market import oracle as morc
+    mega0 = mega_eps[0]
+    fl0 = msim.Fleet.from_episode(catalog, n, mega0)
+    lat0 = fl0.problem().single_platform_latency()
+    slo0 = float(lat0[~fl0.dead].min()) * 0.8
+    morc.whole_horizon_oracle(catalog, n, mega0, slo_latency=slo0)
+    traj = morc.whole_horizon_oracle(catalog, n, mega0, slo_latency=slo0)
+    rows.append(("market.oracle.dp_ms", traj.dp_wall_s * 1e6,
+                 f"dp_ms={traj.dp_wall_s * 1e3:.1f};"
+                 f"intervals={traj.n_intervals};"
+                 f"columns={traj.n_columns};lp_rows={traj.n_lp_rows};"
+                 f"total_cost={traj.total_cost:.4f}"))
+
     # -- vmapped Monte-Carlo suite + distributional regret ---------------
-    # >= 256 sampled traces per policy in ONE compiled call each; regret
-    # per trace is against the pointwise-best policy, summarised as
-    # CVaR/quantile bands (the paper's trade-off claim, distributionally)
+    # the MC option-pricing book rides as ONE tenant class in a mixed
+    # population (batch analytics + interactive riders on the same
+    # platform axis); >= 256 sampled megadiverse traces per policy in
+    # ONE compiled call each; regret per trace is against the
+    # whole-horizon DP oracle on that trace — non-negative by
+    # construction since the DP battery contains both policies' move
+    # sets — summarised as CVaR/quantile bands
+    from repro.market import tenants as mtenants
+    mixed, tslices = mtenants.mixed_pricing_population(fitted,
+                                                       seed=seeded(0))
+    mcat = msim.catalog_from_problem(mixed)
+    mn = mixed.n
     n_mc = smoke_scaled(256, 32)
-    mc_eps = [mev.generate_episode([k.name for k in catalog],
+    mc_eps = [mev.generate_episode([k.name for k in mcat],
                                    seed=seeded(10_000) + i,
                                    horizon_s=3600.0,
-                                   n_initial=min(3, len(catalog)),
-                                   max_platforms=smoke_scaled(8, 6))
+                                   n_initial=min(3, len(mcat)),
+                                   max_platforms=smoke_scaled(8, 6),
+                                   **mev.MEGADIVERSE_KW)
               for i in range(n_mc)]
     tensors = mev.stack_event_tensors(mc_eps)
     # cheap per-trace SLO anchor (the LP-anchored slo_for_episode would
@@ -278,7 +359,7 @@ def run_fused() -> list:
     slos, alloc0s = [], []
     seeder = ResplitPolicy()               # cheap heuristic t=0 plans —
     for ep in mc_eps:                      # a MILP reset x256 would turn
-        fl = msim.Fleet.from_episode(catalog, n, ep)   # this throughput
+        fl = msim.Fleet.from_episode(mcat, mn, ep)     # this throughput
         lat = fl.problem().single_platform_latency()   # row into a MILP
         s = float(lat[~fl.dead].min()) * 0.8           # benchmark
         slos.append(s)
@@ -289,21 +370,36 @@ def run_fused() -> list:
                         ("resplit", "resplit")):
         t0 = time.perf_counter()
         suites[pname] = mfused.run_episodes_vmapped(
-            catalog, n, mc_eps, policy_kind=kind, slo_latencies=slos,
+            mcat, mn, mc_eps, policy_kind=kind, slo_latencies=slos,
             alloc0s=alloc0s, tensors=tensors, policy_name=pname)
         mc_wall[pname] = time.perf_counter() - t0
-    dist = mmetrics.distributional_regret_from_totals(suites)
+    t0 = time.perf_counter()
+    mc_oracles = [morc.whole_horizon_oracle(mcat, mn, ep,
+                                            slo_latency=slos[i])
+                  for i, ep in enumerate(mc_eps)]
+    dp_wall = time.perf_counter() - t0
+    dist = mmetrics.distributional_regret_from_totals(
+        suites, oracles=mc_oracles)
     total_wall = sum(mc_wall.values())
     rows.append(("market.episodes.vmap_throughput",
                  total_wall * 1e6 / (n_mc * len(suites)),
                  f"episodes={n_mc};policies={len(suites)};"
+                 f"tenants={len(tslices)};tau={mixed.tau};"
                  f"episodes_per_s="
                  f"{n_mc * len(suites) / max(total_wall, 1e-12):.0f}"))
+    rows.append(("market.oracle.mc_sweep", dp_wall * 1e6 / n_mc,
+                 f"traces={n_mc};"
+                 f"lp_rows={sum(o.n_lp_rows for o in mc_oracles)}"))
     for name, d in dist.items():
+        # the DP battery contains both fused policies' move sets, so
+        # regret is non-negative up to float summation order
+        assert min(d.mean, d.p50, d.p90) >= -1e-9, (
+            f"negative whole-horizon regret for {name}: mean={d.mean}")
         rows.append((f"market.regret_dist.{name}", 0.0,
                      f"mean={d.mean:.4f};p50={d.p50:.4f};p90={d.p90:.4f};"
                      f"p95={d.p95:.4f};cvar95={d.cvar95:.4f};"
-                     f"worst={d.worst:.4f};traces={d.n_traces}"))
+                     f"worst={d.worst:.4f};traces={d.n_traces};"
+                     f"oracle=whole_horizon"))
     return rows
 
 

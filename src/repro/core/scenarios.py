@@ -302,6 +302,45 @@ def workload_mix_shifts(problem: AllocationProblem, n: int, *, seed: int,
     return out
 
 
+def correlated_price_shocks(problem: AllocationProblem, n: int, *,
+                            seed: int, sigma: float = 0.6,
+                            idio_sigma: float = 0.1,
+                            n_regions: int = 2) -> List[Scenario]:
+    """Correlated REGIONAL price shocks: one latent lognormal factor
+    drives every platform in a region (platform index modulo
+    ``n_regions``), with small idiosyncratic noise on top — the
+    scenario-battery twin of the market's
+    :data:`repro.market.events.PRICE_SHOCK` burst process."""
+    rng = np.random.default_rng(seed)
+    regions = np.arange(problem.mu) % max(1, n_regions)
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        factors = np.exp(rng.normal(0.0, sigma, max(1, n_regions)))
+        idio = np.exp(rng.normal(0.0, idio_sigma, problem.mu))
+        p = np.clip(factors[regions] * idio, 0.05, 10.0)
+        out.append(Scenario(f"corr_price_shock_{k}", b, g, p, t, d))
+    return out
+
+
+def tenant_contention(problem: AllocationProblem, n: int, *, seed: int,
+                      contention_range: Tuple[float, float] = (1.2, 3.0),
+                      p_contended: float = 0.5) -> List[Scenario]:
+    """Multi-tenant contention: each platform independently hosts a
+    noisy neighbour scaling its per-slot throughput (beta multiplier) —
+    the scenario-battery twin of the market's
+    :data:`repro.market.events.CONTENTION` events."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for k in range(n):
+        b, g, p, t, d = _ones(problem)
+        contended = rng.random(problem.mu) < p_contended
+        b = np.where(contended,
+                     rng.uniform(*contention_range, problem.mu), 1.0)
+        out.append(Scenario(f"contention_{k}", b, g, p, t, d))
+    return out
+
+
 def standard_suite(problem: AllocationProblem, *, seed: int = 0,
                    n_each: int = 2,
                    include_baseline: bool = True) -> ScenarioSet:
@@ -315,3 +354,16 @@ def standard_suite(problem: AllocationProblem, *, seed: int = 0,
     scen += cluster_shapes(problem, n_each, seed=seed + 3)
     scen += workload_mix_shifts(problem, n_each, seed=seed + 4)
     return ScenarioSet(tuple(scen))
+
+
+def megadiverse_suite(problem: AllocationProblem, *, seed: int = 0,
+                      n_each: int = 2,
+                      include_baseline: bool = True) -> ScenarioSet:
+    """:func:`standard_suite` widened with the megadiversity families
+    (correlated regional price shocks, multi-tenant contention) —
+    appended so the standard families keep their positions."""
+    base = standard_suite(problem, seed=seed, n_each=n_each,
+                          include_baseline=include_baseline)
+    extra = (correlated_price_shocks(problem, n_each, seed=seed + 5)
+             + tenant_contention(problem, n_each, seed=seed + 6))
+    return ScenarioSet(tuple(base.scenarios) + tuple(extra))

@@ -9,24 +9,31 @@ degrade and recover.  A seed-deterministic event stream
 array, so every replanning solve across a whole episode shares one
 compiled stacked-IPM shape.  Online policies
 (:mod:`repro.market.policies`) re-optimise against the stream and are
-scored by regret against a clairvoyant per-interval oracle
-(:mod:`repro.market.metrics`).
+scored by whole-horizon regret against a trace-clairvoyant DP oracle
+(:mod:`repro.market.oracle`, :mod:`repro.market.metrics`); the event
+space includes adversarial megadiversity kinds (correlated price
+shocks, preemption storms, capacity droughts, multi-tenant contention)
+on top of the base five.
 """
 from repro.market.events import (EventTensor, MarketEpisode, MarketEvent,
                                  generate_episode, materialise_events,
+                                 megadiverse_episodes,
                                  stack_event_tensors, standard_episodes,
-                                 trace_digest)
+                                 suite_digest, trace_digest)
 from repro.market.fused import (FusedTotals, run_episode_fused,
                                 run_episodes_vmapped)
+from repro.market.oracle import (OracleTrajectory, oracle_suite,
+                                 whole_horizon_oracle)
 from repro.market.simulator import (EpisodeResult, Fleet, PlatformKind,
                                     catalog_from_problem, run_episode,
                                     slo_for_episode)
 
 __all__ = [
     "EventTensor", "MarketEpisode", "MarketEvent", "generate_episode",
-    "materialise_events", "stack_event_tensors",
-    "standard_episodes", "trace_digest",
+    "materialise_events", "megadiverse_episodes", "stack_event_tensors",
+    "standard_episodes", "suite_digest", "trace_digest",
     "FusedTotals", "run_episode_fused", "run_episodes_vmapped",
+    "OracleTrajectory", "oracle_suite", "whole_horizon_oracle",
     "EpisodeResult", "Fleet", "PlatformKind", "catalog_from_problem",
     "run_episode", "slo_for_episode",
 ]

@@ -7,6 +7,22 @@ recoveries.  Generation needs only the *kind names* and capacity — not
 the workload — so the same seed yields a byte-identical trace no matter
 how many jobs later ride on it (see :func:`trace_digest`).
 
+Beyond the five base kinds, the generator supports four *megadiversity*
+processes (all off by default, so old seeds keep their digests):
+
+* **correlated price shocks** (``shock_rate``) — one latent lognormal
+  factor re-quotes every alive instance in a random "region" (catalogue
+  kind modulo ``n_regions``) at once, emitted as a tight burst of
+  :data:`PRICE_SHOCK` events;
+* **preemption storms** (``storm_rate``) — a clustered burst of
+  :data:`DEPARTURE` events that kills a random fraction of the fleet in
+  one go (always leaving at least one instance alive);
+* **capacity droughts** (``drought_rate``) — pre-drawn windows during
+  which the arrival process is suppressed entirely;
+* **multi-tenant contention** (``contention_rate``) — a noisy
+  neighbour lands on (or leaves) one instance, scaling its per-slot
+  throughput via :data:`CONTENTION` events.
+
 The generator keeps a shadow fleet so every emitted event is applicable
 (departures never empty the fleet, arrivals never exceed
 ``max_platforms``, recoveries only target degraded instances).  Draws
@@ -27,8 +43,14 @@ DEPARTURE = "departure"      # instance preempted / leaves the market
 PRICE_TICK = "price_tick"    # spot price of an instance re-quotes
 DEGRADE = "degrade"          # throughput degradation onset (straggler)
 RECOVER = "recover"          # degradation clears
+PRICE_SHOCK = "price_shock"  # correlated regional re-quote (latent factor)
+CONTENTION = "contention"    # multi-tenant per-slot throughput scaling
 
-KINDS = (ARRIVAL, DEPARTURE, PRICE_TICK, DEGRADE, RECOVER)
+# Order is append-only: integer kind ids (KIND_IDS) are baked into
+# materialised EventTensors and the fused replay, so new kinds MUST be
+# appended, never inserted.
+KINDS = (ARRIVAL, DEPARTURE, PRICE_TICK, DEGRADE, RECOVER,
+         PRICE_SHOCK, CONTENTION)
 
 Payload = Mapping[str, Union[float, int, str]]
 
@@ -117,9 +139,10 @@ class EventTensor:
     program never touches strings.  ``kind_id`` is an index into
     :data:`KINDS` (:data:`NOOP_ID` = padding: zero-duration no-op at
     ``horizon_s``).  ``scale`` carries the kind-specific payload
-    (``price_scale`` for price ticks, ``beta_scale`` for degrade /
-    recover; 1.0 elsewhere) and ``kind_index`` the arrival's catalogue
-    kind (0 elsewhere).
+    (``price_scale`` for price ticks and shocks, ``beta_scale`` for
+    degrade / recover, ``throughput_scale`` for contention; 1.0
+    elsewhere) and ``kind_index`` the arrival's catalogue kind (0
+    elsewhere).
     """
     time: np.ndarray          # (E,) float64; horizon_s on padding rows
     kind_id: np.ndarray       # (E,) int32; NOOP_ID on padding rows
@@ -187,8 +210,10 @@ def materialise_events(episode: MarketEpisode,
             slot[j] = i
         else:
             slot[j] = slot_of(ev.platform)
-            if ev.kind == PRICE_TICK:
+            if ev.kind in (PRICE_TICK, PRICE_SHOCK):
                 scale[j] = float(ev.get("price_scale"))
+            elif ev.kind == CONTENTION:
+                scale[j] = float(ev.get("throughput_scale"))
             else:                          # DEGRADE / RECOVER
                 scale[j] = float(ev.get("beta_scale"))
     return EventTensor(time, kind_id, slot, kind_index, scale,
@@ -211,6 +236,17 @@ def stack_event_tensors(episodes: Sequence[MarketEpisode]
     return tuple(materialise_events(ep, pad_to=e_max) for ep in episodes)
 
 
+# Internal process selectors for the superposed Poisson draw.  The
+# first five coincide with the base KINDS; the last three are
+# *generator-level* processes that emit bursts of (possibly base-kind)
+# events.  Order matters for the cumulative-rate bins: appended only.
+_PROC_SHOCK = "_shock_burst"
+_PROC_STORM = "_storm_burst"
+_PROC_CONTENTION = "_contention"
+_PROCESSES = (ARRIVAL, DEPARTURE, PRICE_TICK, DEGRADE, RECOVER,
+              _PROC_SHOCK, _PROC_STORM, _PROC_CONTENTION)
+
+
 def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
                      seed: int, n_initial: int = 3,
                      max_platforms: int = 8,
@@ -220,7 +256,18 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
                      degrade_rate: float = 1.0,
                      recover_rate: float = 1.0,
                      price_sigma: float = 0.4,
-                     degrade_range: Tuple[float, float] = (1.5, 4.0)
+                     degrade_range: Tuple[float, float] = (1.5, 4.0),
+                     shock_rate: float = 0.0,
+                     shock_sigma: float = 0.6,
+                     shock_idio_sigma: float = 0.1,
+                     n_regions: int = 2,
+                     storm_rate: float = 0.0,
+                     storm_frac: float = 0.5,
+                     contention_rate: float = 0.0,
+                     contention_range: Tuple[float, float] = (1.2, 3.0),
+                     contention_clear_p: float = 0.4,
+                     drought_rate: float = 0.0,
+                     drought_span: Tuple[float, float] = (0.05, 0.2)
                      ) -> MarketEpisode:
     """Generate one episode.  Rates are events per ``horizon_s`` (so the
     expected event count is independent of the horizon's absolute scale).
@@ -228,6 +275,12 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
     The shadow-fleet bookkeeping guarantees applicability: at least one
     instance stays alive, the fleet never exceeds ``max_platforms``, and
     recoveries pair with an active degradation.
+
+    The megadiversity processes (``shock_rate``, ``storm_rate``,
+    ``contention_rate``, ``drought_rate``) default to 0.0 and consume NO
+    rng draws when disabled, so episodes generated before these kinds
+    existed keep byte-identical traces (and digests) under the same
+    seed — tested by ``tests/test_market.py``.
     """
     kind_names = tuple(kind_names)
     if not kind_names:
@@ -238,19 +291,42 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
     k = len(kind_names)
 
     uid = 0
-    fleet = {}        # name -> dict(kind, degraded, price_scale)
+    fleet = {}        # name -> dict(kind, degraded, price_scale, contention)
     initial = []
     for _ in range(n_initial):
         kind = int(rng.integers(k))
         name = f"{kind_names[kind]}#{uid}"
         uid += 1
-        fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0)
+        fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0,
+                           contention=1.0)
         initial.append((name, kind))
 
     rates = np.array([arrival_rate, departure_rate, price_rate,
-                      degrade_rate, recover_rate], dtype=np.float64)
+                      degrade_rate, recover_rate,
+                      shock_rate, storm_rate, contention_rate],
+                     dtype=np.float64)
     per_s = rates.sum() / horizon_s
     cum = np.cumsum(rates / rates.sum())
+
+    # Capacity-drought windows are pre-drawn (and only when enabled) so
+    # the main-loop draw sequence stays identical for drought_rate=0.
+    droughts = []
+    if drought_rate > 0.0:
+        for _ in range(int(rng.poisson(drought_rate))):
+            start = float(rng.uniform(0.0, horizon_s))
+            dur = float(rng.uniform(*drought_span)) * horizon_s
+            droughts.append((start, start + dur))
+
+    def in_drought(at: float) -> bool:
+        return any(s <= at < e for s, e in droughts)
+
+    def burst_times(at: float, count: int):
+        # Strictly increasing intra-burst timestamps that stay inside
+        # the horizon: the cluster spans at most 1 s (or half the
+        # remaining horizon if tighter).
+        span = min(1.0, 0.5 * (horizon_s - at))
+        step = span / max(1, count)
+        return [at + i * step for i in range(count)]
 
     events = []
     t = 0.0
@@ -259,24 +335,27 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
         if t >= horizon_s:
             break
         which = int(np.searchsorted(cum, rng.random(), side="right"))
-        kind_name = KINDS[which]
+        proc = _PROCESSES[which]
         alive = sorted(fleet)
-        if kind_name == ARRIVAL:
+        if proc == ARRIVAL:
             kind = int(rng.integers(k))
             if len(alive) >= max_platforms:
                 continue
+            if in_drought(t):
+                continue                       # capacity drought: no entry
             name = f"{kind_names[kind]}#{uid}"
             uid += 1
-            fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0)
+            fleet[name] = dict(kind=kind, degraded=False, price_scale=1.0,
+                               contention=1.0)
             events.append(MarketEvent(t, ARRIVAL, name,
                                       (("kind_index", kind),)))
-        elif kind_name == DEPARTURE:
+        elif proc == DEPARTURE:
             if len(alive) <= 1:
                 continue
             name = alive[int(rng.integers(len(alive)))]
             del fleet[name]
             events.append(MarketEvent(t, DEPARTURE, name))
-        elif kind_name == PRICE_TICK:
+        elif proc == PRICE_TICK:
             name = alive[int(rng.integers(len(alive)))]
             step = float(np.exp(rng.normal(0.0, price_sigma)))
             scale = float(np.clip(fleet[name]["price_scale"] * step,
@@ -284,7 +363,7 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
             fleet[name]["price_scale"] = scale
             events.append(MarketEvent(t, PRICE_TICK, name,
                                       (("price_scale", scale),)))
-        elif kind_name == DEGRADE:
+        elif proc == DEGRADE:
             healthy = [n for n in alive if not fleet[n]["degraded"]]
             scale = float(rng.uniform(*degrade_range))
             if not healthy:
@@ -293,7 +372,7 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
             fleet[name]["degraded"] = True
             events.append(MarketEvent(t, DEGRADE, name,
                                       (("beta_scale", scale),)))
-        else:                                    # RECOVER
+        elif proc == RECOVER:
             degraded = [n for n in alive if fleet[n]["degraded"]]
             if not degraded:
                 continue
@@ -301,6 +380,48 @@ def generate_episode(kind_names: Sequence[str], *, horizon_s: float,
             fleet[name]["degraded"] = False
             events.append(MarketEvent(t, RECOVER, name,
                                       (("beta_scale", 1.0),)))
+        elif proc == _PROC_SHOCK:
+            # Correlated regional re-quote: one latent factor hits every
+            # alive instance whose catalogue kind falls in the region.
+            factor = float(np.exp(rng.normal(0.0, shock_sigma)))
+            region = int(rng.integers(max(1, n_regions)))
+            hit = [n for n in alive
+                   if fleet[n]["kind"] % max(1, n_regions) == region]
+            if not hit:
+                continue
+            times = burst_times(t, len(hit))
+            for at, name in zip(times, hit):
+                idio = float(np.exp(rng.normal(0.0, shock_idio_sigma)))
+                scale = float(np.clip(
+                    fleet[name]["price_scale"] * factor * idio, 0.05, 10.0))
+                fleet[name]["price_scale"] = scale
+                events.append(MarketEvent(at, PRICE_SHOCK, name,
+                                          (("price_scale", scale),
+                                           ("factor", factor))))
+            t = times[-1]
+        elif proc == _PROC_STORM:
+            # Spot-preemption storm: a clustered burst of departures
+            # that always leaves at least one instance alive.
+            if len(alive) <= 1:
+                continue
+            max_kill = max(1, int(storm_frac * (len(alive) - 1)))
+            n_kill = 1 + int(rng.integers(max_kill))
+            victims = [alive[i] for i in
+                       rng.choice(len(alive), size=n_kill, replace=False)]
+            times = burst_times(t, len(victims))
+            for at, name in zip(times, victims):
+                del fleet[name]
+                events.append(MarketEvent(at, DEPARTURE, name))
+            t = times[-1]
+        else:                                    # _PROC_CONTENTION
+            name = alive[int(rng.integers(len(alive)))]
+            if float(rng.random()) < contention_clear_p:
+                scale = 1.0                      # noisy neighbour leaves
+            else:
+                scale = float(rng.uniform(*contention_range))
+            fleet[name]["contention"] = scale
+            events.append(MarketEvent(t, CONTENTION, name,
+                                      (("throughput_scale", scale),)))
 
     return MarketEpisode(seed, float(horizon_s), kind_names,
                          int(max_platforms), tuple(initial), tuple(events))
@@ -314,3 +435,32 @@ def standard_episodes(kind_names: Sequence[str], *, n_episodes: int = 3,
     return tuple(generate_episode(kind_names, horizon_s=horizon_s,
                                   seed=seed + 1000 * i, **kw)
                  for i in range(n_episodes))
+
+
+# Adversarial defaults for the megadiversity processes: every episode
+# sees correlated shocks, preemption storms, droughts and contention on
+# top of the base kinds.  Expressed per ``horizon_s`` like all rates.
+MEGADIVERSE_KW = dict(shock_rate=1.5, storm_rate=0.8,
+                      contention_rate=1.5, drought_rate=1.0)
+
+
+def megadiverse_episodes(kind_names: Sequence[str], *, n_episodes: int = 3,
+                         horizon_s: float = 3600.0, seed: int = 0,
+                         **kw) -> Tuple[MarketEpisode, ...]:
+    """Standard episode suite with the megadiversity processes switched
+    on (:data:`MEGADIVERSE_KW`, overridable via ``**kw``) — the
+    adversarial battery the whole-horizon oracle and the property tests
+    score policies under."""
+    merged = {**MEGADIVERSE_KW, **kw}
+    return standard_episodes(kind_names, n_episodes=n_episodes,
+                             horizon_s=horizon_s, seed=seed, **merged)
+
+
+def suite_digest(episodes: Sequence[MarketEpisode]) -> str:
+    """SHA-256 over the per-episode :func:`trace_digest` chain — a single
+    pinnable fingerprint for a whole episode suite (benchmarked as
+    ``market.events.megadiverse_digest``)."""
+    h = hashlib.sha256()
+    for ep in episodes:
+        h.update(trace_digest(ep).encode())
+    return h.hexdigest()

@@ -9,8 +9,11 @@ needs.  This module replays the SAME episode semantics over the
 pre-materialised :class:`repro.market.events.EventTensor` form of a
 trace:
 
-* fleet state is four flat arrays (occupied / kind / beta-scale /
-  price-scale per slot) stepped branchlessly by integer event ids;
+* fleet state is five flat arrays (occupied / kind / beta-scale /
+  price-scale / contention-scale per slot) stepped branchlessly by
+  integer event ids — covering the megadiversity kinds (correlated
+  price shocks, preemption storms, droughts, contention) as well as
+  the base five;
 * each scan step closes the standing interval (the jnp port of
   :func:`repro.core.heuristics.evaluate` against the penalised
   fixed-shape problem), applies the event, and replans through a fused
@@ -58,13 +61,14 @@ def fused_catalog(catalog, n) -> Tuple[jnp.ndarray, ...]:
         np.asarray(n, dtype=np.float64))
 
 
-def _problem_arrays(cat, occ, kind, bsc, psc):
+def _problem_arrays(cat, occ, kind, bsc, psc, csc):
     """The penalised fixed-shape problem for a fleet state — the jnp port
     of :meth:`Fleet.problem` (empty slots borrow kind 0 via the reset-on-
-    departure convention and are dead-penalised)."""
+    departure convention and are dead-penalised).  ``csc`` is the
+    multi-tenant contention scale (unit when no noisy neighbour)."""
     cat_beta, cat_gamma, cat_rho, cat_pi, n = cat
     scale = jnp.where(occ, 1.0, DEAD_PENALTY)
-    beta = cat_beta[kind] * bsc[:, None] * scale[:, None]
+    beta = cat_beta[kind] * bsc[:, None] * csc[:, None] * scale[:, None]
     gamma = cat_gamma[kind] * scale[:, None]
     return beta * n[None, :], gamma, cat_rho[kind], cat_pi[kind] * psc
 
@@ -158,6 +162,10 @@ class FusedTotals:
     slo_violation_s: float
     slo_violations: int
     replans: int
+    # canonical trace fingerprint (events.trace_digest) of the episode
+    # these totals were scored on — what metrics.distributional_regret*
+    # match on before comparing across policies / against an oracle
+    trace_digest: Optional[str] = None
 
     def total_cost(self, sla_penalty_rate: float = 0.0) -> float:
         return self.accrued_cost + sla_penalty_rate * self.slo_violation_s
@@ -171,9 +179,9 @@ def _replan_fn(policy_kind: str, n_weights: int):
     """Fused replanner: ``(cat, fleet state, alloc, slo) -> (alloc',
     replanned)``."""
     if policy_kind == "static":
-        def replan(cat, occ, kind, bsc, psc, alloc, slo):
+        def replan(cat, occ, kind, bsc, psc, csc, alloc, slo):
             beta_n, gamma, rho, pi = _problem_arrays(cat, occ, kind, bsc,
-                                                     psc)
+                                                     psc, csc)
             stranded = jnp.where(occ[:, None], 0.0, alloc).sum()
             need = stranded > 1e-12
             proj = _project_to_alive(beta_n, gamma, alloc, occ)
@@ -183,9 +191,9 @@ def _replan_fn(policy_kind: str, n_weights: int):
     if policy_kind == "resplit":
         lams = [float(v) for v in np.linspace(0.0, 1.0, n_weights)]
 
-        def replan(cat, occ, kind, bsc, psc, alloc, slo):
+        def replan(cat, occ, kind, bsc, psc, csc, alloc, slo):
             beta_n, gamma, rho, pi = _problem_arrays(cat, occ, kind, bsc,
-                                                     psc)
+                                                     psc, csc)
             tau = beta_n.shape[1]
             lat_1p, cost_1p = _single_platform(beta_n, gamma, rho, pi)
             w = jnp.where(occ, 1.0 / lat_1p, 0.0)
@@ -231,9 +239,9 @@ def _episode_fn(policy_kind: str, n_weights: int):
         slots = jnp.arange(s, dtype=jnp.int32)
         zero = jnp.zeros((), jnp.float64)
 
-        def close(occ, kind, bsc, psc, alloc, dt, acc):
+        def close(occ, kind, bsc, psc, csc, alloc, dt, acc):
             beta_n, gamma, rho, pi = _problem_arrays(cat, occ, kind, bsc,
-                                                     psc)
+                                                     psc, csc)
             mk, cost = _evaluate(beta_n, gamma, rho, pi, alloc)
             live = dt > 0.0
             viol = live & (mk > slo * (1.0 + _SLO_TOL))
@@ -244,17 +252,19 @@ def _episode_fn(policy_kind: str, n_weights: int):
                     viol_n + viol.astype(jnp.int32))
 
         def step(carry, evt):
-            occ, kind, bsc, psc, alloc, t_prev, acc, replans = carry
+            occ, kind, bsc, psc, csc, alloc, t_prev, acc, replans = carry
             t, k_id, sl, k_ix, sc = evt
             dt = jnp.maximum(t - t_prev, 0.0)
-            acc = close(occ, kind, bsc, psc, alloc, dt, acc)
+            acc = close(occ, kind, bsc, psc, csc, alloc, dt, acc)
             # apply the event branchlessly on the touched slot
             hit = slots == sl
             is_arr = k_id == ev.KIND_IDS[ev.ARRIVAL]
             is_dep = k_id == ev.KIND_IDS[ev.DEPARTURE]
-            is_price = k_id == ev.KIND_IDS[ev.PRICE_TICK]
+            is_price = ((k_id == ev.KIND_IDS[ev.PRICE_TICK]) |
+                        (k_id == ev.KIND_IDS[ev.PRICE_SHOCK]))
             is_beta = ((k_id == ev.KIND_IDS[ev.DEGRADE]) |
                        (k_id == ev.KIND_IDS[ev.RECOVER]))
+            is_cont = k_id == ev.KIND_IDS[ev.CONTENTION]
             fresh = hit & (is_arr | is_dep)
             occ = jnp.where(hit & is_arr, True,
                             jnp.where(hit & is_dep, False, occ))
@@ -266,23 +276,26 @@ def _episode_fn(policy_kind: str, n_weights: int):
                             jnp.where(hit & is_beta, sc, bsc))
             psc = jnp.where(fresh, 1.0,
                             jnp.where(hit & is_price, sc, psc))
-            new_alloc, replanned = replan(cat, occ, kind, bsc, psc, alloc,
-                                          slo)
+            csc = jnp.where(fresh, 1.0,
+                            jnp.where(hit & is_cont, sc, csc))
+            new_alloc, replanned = replan(cat, occ, kind, bsc, psc, csc,
+                                          alloc, slo)
             noop = k_id == ev.NOOP_ID
             alloc = jnp.where(noop, alloc, new_alloc)
             replans = replans + jnp.where(noop, 0,
                                           replanned.astype(jnp.int32))
-            return (occ, kind, bsc, psc, alloc,
+            return (occ, kind, bsc, psc, csc, alloc,
                     jnp.maximum(t, t_prev), acc, replans), None
 
         acc0 = (zero, zero, zero, jnp.zeros((), jnp.int32))
         carry0 = (occ0, kind0, jnp.ones((s,), jnp.float64),
-                  jnp.ones((s,), jnp.float64), alloc0, zero, acc0,
+                  jnp.ones((s,), jnp.float64), jnp.ones((s,), jnp.float64),
+                  alloc0, zero, acc0,
                   jnp.ones((), jnp.int32))     # reset counts as a replan
         carry, _ = jax.lax.scan(step, carry0,
                                 (times, kid, slot, kidx, scale))
-        occ, kind, bsc, psc, alloc, t_prev, acc, replans = carry
-        acc = close(occ, kind, bsc, psc, alloc,
+        occ, kind, bsc, psc, csc, alloc, t_prev, acc, replans = carry
+        acc = close(occ, kind, bsc, psc, csc, alloc,
                     jnp.maximum(horizon - t_prev, 0.0), acc)
         cost_acc, mk_dt, viol_s, viol_n = acc
         avg_mk = mk_dt / jnp.maximum(horizon, 1e-12)
@@ -341,7 +354,7 @@ def run_episode_fused(catalog, n, episode: MarketEpisode, *,
     return FusedTotals(policy_name or policy_kind, episode.seed,
                        tensor.horizon_s, float(slo_latency), float(cost),
                        float(avg_mk), float(viol_s), int(viol_n),
-                       int(replans))
+                       int(replans), trace_digest=ev.trace_digest(episode))
 
 
 def run_episodes_vmapped(catalog, n, episodes: Sequence[MarketEpisode], *,
@@ -448,7 +461,8 @@ def run_episodes_vmapped(catalog, n, episodes: Sequence[MarketEpisode], *,
     return tuple(
         FusedTotals(name, episodes[i].seed, tensors[i].horizon_s,
                     float(slos[i]), float(cost[i]), float(avg_mk[i]),
-                    float(viol_s[i]), int(viol_n[i]), int(replans[i]))
+                    float(viol_s[i]), int(viol_n[i]), int(replans[i]),
+                    trace_digest=ev.trace_digest(episodes[i]))
         for i in range(n_eps))
 
 

@@ -11,14 +11,24 @@ module reduces those to:
 * hypervolume-over-time: the 2-D hypervolume of the realised
   (cost-rate, makespan) operating points accumulated up to each event,
 * regret: excess accrued cost and time-averaged excess latency versus
-  the oracle run of the same episode.
+  an oracle run of the same episode.
+
+Two oracles exist.  :func:`whole_horizon_regret` measures against the
+whole-horizon DP (:func:`repro.market.oracle.whole_horizon_oracle`) and
+is **non-negative by construction** when the policy's realised run was
+folded into the DP's move set via ``paths`` — the honest headline
+number.  :func:`regret` / :func:`regret_table` measure against the
+per-interval clairvoyant (:class:`repro.market.policies.OraclePolicy`);
+that oracle optimises lexicographic (cost, makespan) per interval, not
+the accrual objective, so policies can legitimately beat it — keep it
+as a *diagnostic lower-bound*, never a headline (see docs/market.md).
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 import warnings
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -177,15 +187,18 @@ class DistributionalRegret:
 
 
 def distributional_regret(costs: Dict[str, np.ndarray], *,
-                          alpha: float = 0.95
+                          alpha: float = 0.95,
+                          baseline: Optional[np.ndarray] = None
                           ) -> Dict[str, DistributionalRegret]:
     """Distributional (CVaR / quantile-band) regret across a trace suite.
 
     ``costs`` maps policy name -> (n_traces,) total episode cost, all
     evaluated on the SAME traces in the same order (e.g. from
     :func:`repro.market.fused.run_suite_fused` totals via
-    ``total_cost``).  The per-trace reference is the pointwise best
-    policy; ``cvar`` averages the worst ``1 - alpha`` tail.
+    ``total_cost``).  The per-trace reference is ``baseline`` when given
+    (e.g. whole-horizon oracle costs per trace, in suite order) and the
+    pointwise best policy otherwise; ``cvar`` averages the worst
+    ``1 - alpha`` tail.
     """
     if not costs:
         raise ValueError("no policies")
@@ -193,7 +206,15 @@ def distributional_regret(costs: Dict[str, np.ndarray], *,
                     for v in costs.values()])
     if mat.ndim != 2:
         raise ValueError("each policy needs a 1-D per-trace cost array")
-    best = mat.min(axis=0)
+    if baseline is not None:
+        best = np.asarray(baseline, dtype=np.float64)
+        if best.shape != (mat.shape[1],):
+            raise ValueError(
+                f"baseline has {best.shape} costs, suite has "
+                f"{mat.shape[1]} traces — regret needs one oracle cost "
+                f"per trace, in suite order")
+    else:
+        best = mat.min(axis=0)
     n = mat.shape[1]
     k = max(1, int(np.ceil((1.0 - alpha) * n)))   # tail size for CVaR
     out: Dict[str, DistributionalRegret] = {}
@@ -211,12 +232,25 @@ def distributional_regret(costs: Dict[str, np.ndarray], *,
 
 
 def distributional_regret_from_totals(suites, *, alpha: float = 0.95,
-                                      sla_penalty_rates=None
+                                      sla_penalty_rates=None,
+                                      oracles=None
                                       ) -> Dict[str, DistributionalRegret]:
     """:func:`distributional_regret` over ``{policy: [FusedTotals, ...]}``
     suites (see :func:`repro.market.fused.run_suite_fused`).
     ``sla_penalty_rates`` is a scalar or per-trace sequence charged on
-    SLO-violating seconds."""
+    SLO-violating seconds.
+
+    ``oracles`` (optional) is one whole-horizon
+    :class:`~repro.market.oracle.OracleTrajectory` per trace, in suite
+    order: their ``total_cost`` becomes the per-trace regret baseline.
+
+    Comparability is enforced, not assumed: every policy's totals must
+    carry the same trace digests in the same order (falling back to
+    episode seeds only for totals predating the digest field), and the
+    oracle trajectories must match those digests trace-for-trace — a
+    mismatch raises ``ValueError`` instead of silently zipping
+    different traces together.
+    """
     def rate_for(i):
         if sla_penalty_rates is None:
             return 0.0
@@ -224,18 +258,36 @@ def distributional_regret_from_totals(suites, *, alpha: float = 0.95,
             return float(sla_penalty_rates)
         return float(sla_penalty_rates[i])
 
-    seeds = None
+    ref = None          # (policy name, per-trace (seed, digest) tuple)
     costs: Dict[str, np.ndarray] = {}
     for name, totals in suites.items():
-        s = tuple(t.episode_seed for t in totals)
-        if seeds is None:
-            seeds = s
-        elif s != seeds:
-            raise ValueError(f"policy {name!r} scored a different trace "
-                             f"suite — regret needs matched traces")
+        ident = tuple((t.episode_seed, getattr(t, "trace_digest", None))
+                      for t in totals)
+        if ref is None:
+            ref = (name, ident)
+        elif ident != ref[1]:
+            raise ValueError(
+                f"policy {name!r} scored a different trace suite than "
+                f"{ref[0]!r} (trace digest/seed mismatch) — regret "
+                f"needs matched traces")
         costs[name] = np.array([t.total_cost(rate_for(i))
                                 for i, t in enumerate(totals)])
-    return distributional_regret(costs, alpha=alpha)
+    baseline = None
+    if oracles is not None:
+        oracles = list(oracles)
+        n_traces = len(ref[1])
+        if len(oracles) != n_traces:
+            raise ValueError(f"{len(oracles)} oracle trajectories for "
+                             f"{n_traces} traces")
+        for i, ((seed, digest), o) in enumerate(zip(ref[1], oracles)):
+            if o.episode_seed != seed or (digest is not None and
+                                          o.trace_digest != digest):
+                raise ValueError(
+                    f"oracle trajectory {i} solved a different trace "
+                    f"(trace digest/seed mismatch) — regret needs "
+                    f"matched traces")
+        baseline = np.array([o.total_cost for o in oracles])
+    return distributional_regret(costs, alpha=alpha, baseline=baseline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +304,10 @@ class RegretReport:
 
 
 def regret(policy: EpisodeMetrics, oracle: EpisodeMetrics) -> RegretReport:
+    """Policy vs the PER-INTERVAL clairvoyant — a diagnostic lower
+    bound on achievable cost, not a floor: policies can legitimately go
+    negative here (see :func:`whole_horizon_regret` for the honest,
+    non-negative contract)."""
     if len(policy.t1) != len(oracle.t1):
         raise ValueError("episodes do not align (different event traces)")
     dt = policy.durations
@@ -270,11 +326,48 @@ def regret(policy: EpisodeMetrics, oracle: EpisodeMetrics) -> RegretReport:
     return rep
 
 
+def whole_horizon_regret(policy, oracle) -> RegretReport:
+    """Policy vs the whole-horizon DP oracle on one episode.
+
+    ``policy`` is an :class:`EpisodeMetrics` (Python-loop run) or a
+    :class:`~repro.market.fused.FusedTotals` (fused replay); ``oracle``
+    an :class:`~repro.market.oracle.OracleTrajectory` solved on the SAME
+    trace — seed and (when available) trace digest are checked, a
+    mismatch raises.  ``cost_regret >= 0`` whenever the policy's
+    realised run was folded into the oracle's move set (``paths=``);
+    the SLA penalty rates must agree for the comparison to be $-fair.
+    """
+    if policy.episode_seed != oracle.episode_seed:
+        raise ValueError(
+            f"policy ran seed {policy.episode_seed}, oracle solved seed "
+            f"{oracle.episode_seed} — regret needs matched traces")
+    digest = getattr(policy, "trace_digest", None)
+    if digest is not None and digest != oracle.trace_digest:
+        raise ValueError("policy and oracle trace digests differ — "
+                         "regret needs matched traces")
+    if hasattr(policy, "total_cost") and callable(policy.total_cost):
+        # FusedTotals: charge the oracle's SLA rate for a fair total
+        total = policy.total_cost(oracle.sla_penalty_rate)
+    else:
+        total = policy.total_cost
+    rep = RegretReport(
+        policy.policy, policy.episode_seed,
+        cost_regret=total - oracle.total_cost,
+        makespan_regret=policy.avg_makespan - oracle.avg_makespan,
+        slo_excess_s=policy.slo_violation_s - oracle.slo_violation_s,
+        replans=policy.replans,
+        replan_wall_s=getattr(policy, "replan_wall_s", 0.0))
+    obs.gauge(f"market.{rep.policy}.wh_cost_regret", rep.cost_regret)
+    return rep
+
+
 def regret_table(results: List[EpisodeResult],
                  oracle_results: List[EpisodeResult], *,
                  sla_penalty_rate: float = 0.0
                  ) -> Dict[str, Dict[str, float]]:
-    """Aggregate per-policy mean regret over an episode suite.
+    """Aggregate per-policy mean regret over an episode suite, against
+    the PER-INTERVAL clairvoyant (diagnostic lower bound — see
+    :func:`whole_horizon_regret_table` for the non-negative contract).
 
     ``results`` may hold several policies x episodes; ``oracle_results``
     holds one oracle run per episode (matched by seed).
@@ -293,6 +386,41 @@ def regret_table(results: List[EpisodeResult],
     for r in results:
         rep = regret(summarise(r, sla_penalty_rate=rate_for(
             r.episode_seed)), oracles[r.episode_seed])
+        rows.setdefault(r.policy, []).append(rep)
+    out: Dict[str, Dict[str, float]] = {}
+    for policy, reps in rows.items():
+        out[policy] = dict(
+            cost_regret=float(np.mean([r.cost_regret for r in reps])),
+            makespan_regret=float(np.mean([r.makespan_regret
+                                           for r in reps])),
+            slo_excess_s=float(np.mean([r.slo_excess_s for r in reps])),
+            replans=float(np.mean([r.replans for r in reps])),
+            replan_wall_s=float(np.mean([r.replan_wall_s
+                                         for r in reps])))
+    return out
+
+
+def whole_horizon_regret_table(results: List[EpisodeResult],
+                               oracles, *,
+                               sla_penalty_rate: float = 0.0
+                               ) -> Dict[str, Dict[str, float]]:
+    """Aggregate per-policy mean WHOLE-HORIZON regret over a suite.
+
+    ``oracles`` maps episode seed -> the DP
+    :class:`~repro.market.oracle.OracleTrajectory` for that trace.  Pass
+    each policy's runs into the oracle solve via ``paths=`` to make
+    every ``cost_regret`` here non-negative by construction.
+    ``sla_penalty_rate`` may be a ``{seed: rate}`` mapping.
+    """
+    def rate_for(seed):
+        if isinstance(sla_penalty_rate, dict):
+            return sla_penalty_rate[seed]
+        return sla_penalty_rate
+
+    rows: Dict[str, List[RegretReport]] = {}
+    for r in results:
+        m = summarise(r, sla_penalty_rate=rate_for(r.episode_seed))
+        rep = whole_horizon_regret(m, oracles[r.episode_seed])
         rows.setdefault(r.policy, []).append(rep)
     out: Dict[str, Dict[str, float]] = {}
     for policy, reps in rows.items():

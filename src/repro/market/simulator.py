@@ -70,6 +70,7 @@ class Slot:
     kind: Optional[PlatformKind] = None
     beta_scale: float = 1.0       # >1 = degraded throughput
     price_scale: float = 1.0      # spot multiplier on pi
+    contention_scale: float = 1.0  # >1 = noisy-neighbour slowdown
 
     @property
     def occupied(self) -> bool:
@@ -130,12 +131,15 @@ class Fleet:
             self._occupy(event.platform, int(event.get("kind_index")))
         elif event.kind == ev.DEPARTURE:
             self.slots[self._slot_of(event.platform)] = Slot()
-        elif event.kind == ev.PRICE_TICK:
+        elif event.kind in (ev.PRICE_TICK, ev.PRICE_SHOCK):
             self.slots[self._slot_of(event.platform)].price_scale = \
                 float(event.get("price_scale"))
         elif event.kind in (ev.DEGRADE, ev.RECOVER):
             self.slots[self._slot_of(event.platform)].beta_scale = \
                 float(event.get("beta_scale"))
+        elif event.kind == ev.CONTENTION:
+            self.slots[self._slot_of(event.platform)].contention_scale = \
+                float(event.get("throughput_scale"))
         else:
             raise ValueError(f"unknown event kind {event.kind!r}")
 
@@ -158,7 +162,7 @@ class Fleet:
         beta, gamma, rho, pi, names = [], [], [], [], []
         for s in self.slots:
             kind = s.kind or filler
-            beta.append(kind.beta * s.beta_scale)
+            beta.append(kind.beta * s.beta_scale * s.contention_scale)
             gamma.append(kind.gamma)
             rho.append(kind.rho)
             pi.append(kind.pi * s.price_scale)

@@ -1,0 +1,118 @@
+"""Multi-tenant workload mixes for the spot market.
+
+The paper's workload is a single tenant: 128 Monte-Carlo option-pricing
+tasks (:mod:`repro.pricing`, priced by the batched kernels in
+``kernels/mc_pricing.py``) fitted against the IaaS platform table.  The
+market subsystem stresses allocation under *mixed populations*: the MC
+pricing book is one tenant class among several, each contributing its
+own task columns to one combined allocation problem over the SAME
+platform axis — so a fleet shared by tenants replans as one problem and
+the contention events (:data:`repro.market.events.CONTENTION`) model the
+tenants' mutual throughput interference.
+
+A :class:`TenantClass` is a column block ``(beta, gamma, n)``;
+:func:`mixed_problem` concatenates blocks along the task axis and keeps
+per-tenant column slices so episode totals can be attributed back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.problem import AllocationProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantClass:
+    """One tenant's task columns against a shared platform axis."""
+    name: str
+    beta: np.ndarray          # (mu, tau_k) seconds per work unit
+    gamma: np.ndarray         # (mu, tau_k) setup seconds
+    n: np.ndarray             # (tau_k,) work units per task
+    task_names: Tuple[str, ...]
+
+    @property
+    def tau(self) -> int:
+        return int(self.n.shape[0])
+
+
+def pricing_tenant(problem: AllocationProblem,
+                   name: str = "mc_pricing") -> TenantClass:
+    """Wrap a fitted option-pricing problem (e.g. from
+    ``benchmarks.common.experiment_problem`` — the paper's 128-option MC
+    book) as one tenant class.  The platform axis (rho/pi and row order)
+    becomes the shared market axis for the whole population."""
+    task_names = problem.task_names or tuple(
+        f"{name}.task{j}" for j in range(problem.tau))
+    return TenantClass(name, np.asarray(problem.beta, dtype=np.float64),
+                       np.asarray(problem.gamma, dtype=np.float64),
+                       np.asarray(problem.n, dtype=np.float64),
+                       tuple(task_names))
+
+
+def synthetic_tenant(problem: AllocationProblem, name: str, *,
+                     n_tasks: int, seed: int,
+                     beta_jitter: float = 0.35,
+                     work_scale: float = 1.0) -> TenantClass:
+    """A synthetic tenant class sharing ``problem``'s platform axis:
+    each task column resamples one of the base problem's columns with
+    lognormal jitter on the per-platform rates and a rescaled work
+    volume — seed-deterministic, like everything market-side."""
+    rng = np.random.default_rng(seed)
+    cols = rng.integers(problem.tau, size=n_tasks)
+    jb = np.exp(rng.normal(0.0, beta_jitter, (problem.mu, n_tasks)))
+    jg = np.exp(rng.normal(0.0, beta_jitter, (problem.mu, n_tasks)))
+    jn = np.exp(rng.normal(0.0, 0.5, n_tasks))
+    beta = problem.beta[:, cols] * jb
+    gamma = problem.gamma[:, cols] * jg
+    n = problem.n[cols] * jn * float(work_scale)
+    names = tuple(f"{name}.task{j}" for j in range(n_tasks))
+    return TenantClass(name, beta, gamma, n, names)
+
+
+def mixed_problem(problem: AllocationProblem,
+                  tenants: Sequence[TenantClass]
+                  ) -> Tuple[AllocationProblem, Dict[str, slice]]:
+    """Concatenate tenant column blocks into ONE allocation problem over
+    ``problem``'s platform axis.  Returns the combined problem plus
+    ``{tenant name: column slice}`` for per-tenant attribution."""
+    if not tenants:
+        raise ValueError("empty tenant population")
+    for t in tenants:
+        if t.beta.shape[0] != problem.mu:
+            raise ValueError(
+                f"tenant {t.name!r} has {t.beta.shape[0]} platform rows, "
+                f"shared axis has {problem.mu}")
+    slices: Dict[str, slice] = {}
+    lo = 0
+    for t in tenants:
+        slices[t.name] = slice(lo, lo + t.tau)
+        lo += t.tau
+    combined = AllocationProblem(
+        np.concatenate([t.beta for t in tenants], axis=1),
+        np.concatenate([t.gamma for t in tenants], axis=1),
+        np.concatenate([t.n for t in tenants]),
+        problem.rho, problem.pi, problem.platform_names,
+        tuple(nm for t in tenants for nm in t.task_names))
+    return combined, slices
+
+
+def mixed_pricing_population(problem: AllocationProblem, *, seed: int = 0
+                             ) -> Tuple[AllocationProblem,
+                                        Dict[str, slice]]:
+    """The standard mixed population: the MC option-pricing book as one
+    tenant class alongside a batch-analytics tenant (fewer, heavier
+    tasks) and an interactive tenant (many light tasks) — the workload
+    the megadiversity benches and property tests ride on."""
+    tenants = [
+        pricing_tenant(problem),
+        synthetic_tenant(problem, "batch_analytics",
+                         n_tasks=max(2, problem.tau // 2),
+                         seed=seed + 1, work_scale=2.0),
+        synthetic_tenant(problem, "interactive",
+                         n_tasks=max(2, problem.tau // 2),
+                         seed=seed + 2, work_scale=0.25),
+    ]
+    return mixed_problem(problem, tenants)

@@ -230,6 +230,131 @@ def test_distributional_regret_from_totals_requires_matched_traces():
         metrics.distributional_regret_from_totals({"a": [t1], "b": [t2]})
 
 
+def test_distributional_regret_rejects_same_seed_different_digest():
+    """The comparability gap: two suites can share episode seeds while
+    replaying DIFFERENT traces (e.g. one generated with megadiversity,
+    one without).  Matching must check the trace digest, not just the
+    seed."""
+    t1 = fused.FusedTotals("a", 1, 10.0, 1.0, 2.0, 1.0, 0.0, 0, 1,
+                           trace_digest="aaa")
+    t2 = fused.FusedTotals("b", 1, 10.0, 1.0, 3.0, 1.0, 0.0, 0, 1,
+                           trace_digest="bbb")
+    with pytest.raises(ValueError, match="matched traces"):
+        metrics.distributional_regret_from_totals({"a": [t1], "b": [t2]})
+    # matched digests pass
+    t3 = fused.FusedTotals("b", 1, 10.0, 1.0, 3.0, 1.0, 0.0, 0, 1,
+                           trace_digest="aaa")
+    d = metrics.distributional_regret_from_totals({"a": [t1],
+                                                   "b": [t3]})
+    assert d["a"].mean == 0.0 and d["b"].mean == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Megadiversity kinds: loop-vs-scan parity on adversarial traces
+# ---------------------------------------------------------------------------
+
+# elevated degrade/recover so four episodes cover ALL seven kinds (the
+# drought process emits no events — it suppresses arrivals instead)
+MEGA_KW = dict(n_initial=3, max_platforms=6,
+               degrade_rate=2.0, recover_rate=4.0)
+
+
+def _megadiverse_eps(catalog, n_episodes=4, seed=0):
+    return events.megadiverse_episodes(
+        [k.name for k in catalog], n_episodes=n_episodes, seed=seed,
+        **MEGA_KW)
+
+
+def test_megadiverse_suite_covers_every_kind():
+    _, catalog = _market()
+    eps = _megadiverse_eps(catalog)
+    seen = {e.kind for ep in eps for e in ep.events}
+    assert seen == set(events.KINDS)
+
+
+@pytest.mark.parametrize("policy_cls,kind",
+                         [(ResplitPolicy, "resplit"),
+                          (StaticPolicy, "static")])
+def test_fused_megadiverse_matches_python_loop(policy_cls, kind):
+    """Differential test for the new event kinds: on traces carrying
+    correlated price shocks, preemption storms, contention and droughts
+    the lax.scan replay matches the Python event loop to 1e-12."""
+    base, catalog = _market()
+    kw = (dict(node_limit=40, time_limit_s=5.0)
+          if policy_cls is StaticPolicy else {})
+    for ep in _megadiverse_eps(catalog):
+        slo = _slo(catalog, base.n, ep)
+        pol = policy_cls(**kw)
+        loop = metrics.summarise(simulator.run_episode(
+            catalog, base.n, ep, pol, slo_latency=slo))
+        fleet0 = simulator.Fleet.from_episode(catalog, base.n, ep)
+        alloc0 = pol.reset(fleet0.view(0.0, slo))
+        ft = fused.run_episode_fused(catalog, base.n, ep,
+                                     policy_kind=kind,
+                                     slo_latency=slo, alloc0=alloc0)
+        assert ft.trace_digest == events.trace_digest(ep)
+        assert _rel(ft.accrued_cost, loop.accrued_cost) <= 1e-12
+        assert _rel(ft.avg_makespan, loop.avg_makespan) <= 1e-12
+        assert _rel(ft.slo_violation_s, loop.slo_violation_s) <= 1e-12
+        assert ft.slo_violations == loop.slo_violations
+        assert ft.replans == loop.replans
+
+
+def test_fused_megadiverse_compile_flat():
+    """The new kinds ride the SAME compiled scan program: replaying a
+    megadiverse suite repeatedly adds nothing to the fused or stacked
+    compile counters after the first episode batch."""
+    base, catalog = _market()
+    eps = _megadiverse_eps(catalog)
+    pol = ResplitPolicy()
+    runs = []
+    for ep in eps:
+        slo = _slo(catalog, base.n, ep)
+        fl = simulator.Fleet.from_episode(catalog, base.n, ep)
+        runs.append((ep, slo, pol.reset(fl.view(0.0, slo))))
+    firsts = [fused.run_episode_fused(catalog, base.n, ep,
+                                      policy_kind="resplit",
+                                      slo_latency=slo, alloc0=a0)
+              for ep, slo, a0 in runs]
+    stacked_count = lp.stacked_compile_count()
+    fused_count = fused.fused_compile_count()
+    seq = obs.last_seq()
+    for _ in range(2):
+        for (ep, slo, a0), first in zip(runs, firsts):
+            again = fused.run_episode_fused(catalog, base.n, ep,
+                                            policy_kind="resplit",
+                                            slo_latency=slo, alloc0=a0)
+            assert again == first
+    assert lp.stacked_compile_count() == stacked_count
+    assert fused.fused_compile_count() == fused_count
+    assert obs.compile_events(since_seq=seq) == []
+
+
+def test_vmapped_megadiverse_matches_single():
+    """The batched replay handles mixed adversarial traces: each row of
+    the vmapped suite equals its single-episode fused replay."""
+    base, catalog = _market()
+    eps = _megadiverse_eps(catalog)
+    tensors = events.stack_event_tensors(eps)
+    pol = ResplitPolicy()
+    slos, alloc0s = [], []
+    for ep in eps:
+        slo = _slo(catalog, base.n, ep)
+        slos.append(slo)
+        fl = simulator.Fleet.from_episode(catalog, base.n, ep)
+        alloc0s.append(pol.reset(fl.view(0.0, slo)))
+    batch = fused.run_episodes_vmapped(
+        catalog, base.n, eps, policy_kind="resplit", slo_latencies=slos,
+        alloc0s=alloc0s, tensors=tensors)
+    for i, ep in enumerate(eps):
+        single = fused.run_episode_fused(
+            catalog, base.n, ep, policy_kind="resplit",
+            slo_latency=slos[i], alloc0=alloc0s[i], tensor=tensors[i])
+        assert _rel(batch[i].accrued_cost, single.accrued_cost) <= 1e-12
+        assert _rel(batch[i].avg_makespan, single.avg_makespan) <= 1e-12
+        assert batch[i].replans == single.replans
+
+
 def test_hypervolume_over_time_incremental_matches_bruteforce():
     """The incremental front maintains EXACTLY the per-prefix
     hypervolumes the old O(n^2) loop recomputed."""

@@ -354,3 +354,122 @@ def test_elastic_consumes_market_events():
     ctl.apply_event(events.MarketEvent(3599.0, events.PRICE_TICK, name,
                                        (("price_scale", 2.5),)))
     assert np.isclose(ctl.problem.pi[i], ctl._base_pi[i] * 2.5)
+
+
+# ---------------------------------------------------------------------------
+# Megadiversity event kinds: digest stability, stream validity, tenants
+# ---------------------------------------------------------------------------
+
+def test_base_kind_digests_pinned():
+    """Adding the megadiversity generator processes must not perturb
+    base-kind streams: zero-rate processes consume NO rng draws, so a
+    pre-megadiversity trace replays bit-identically.  These literals
+    are the shipped digests — a change here is a breaking change to
+    every committed benchmark row keyed on a trace digest."""
+    ep = events.generate_episode(("cpu", "gpu", "fpga"),
+                                 horizon_s=3600.0, seed=7)
+    assert events.trace_digest(ep) == \
+        "c32bfd91b2cda9f822a400888facf9bd9d3409675bae377137cfb1327829967d"
+    mega = events.generate_episode(
+        ("cpu", "gpu", "fpga"), horizon_s=3600.0, seed=7,
+        **events.MEGADIVERSE_KW)
+    assert events.trace_digest(mega) == \
+        "b9c5c66c7a90a788c1e7437eb27ebd72f408c0345fa76405c9c3116b712bd1e4"
+
+
+def test_megadiverse_stream_validity():
+    """Adversarial streams keep the simulator's invariants: strictly
+    increasing times inside the horizon, at least one platform alive
+    through every preemption storm, and well-formed payloads for the
+    new kinds."""
+    names = [f"kind{i}" for i in range(4)]
+    for seed in range(6):
+        ep = events.generate_episode(names, seed=seed, **KW,
+                                     **events.MEGADIVERSE_KW)
+        alive = {n for n, _ in ep.initial}
+        t_prev = 0.0
+        for e in ep.events:
+            assert t_prev < e.time < ep.horizon_s
+            t_prev = e.time
+            if e.kind == events.ARRIVAL:
+                assert e.platform not in alive
+                alive.add(e.platform)
+            elif e.kind == events.DEPARTURE:
+                alive.remove(e.platform)
+            else:
+                assert e.platform in alive
+            if e.kind == events.PRICE_SHOCK:
+                assert 0.05 <= e.get("price_scale") <= 10.0
+                assert e.get("factor") > 0.0
+            if e.kind == events.CONTENTION:
+                s = e.get("throughput_scale")
+                assert s == 1.0 or 1.2 <= s <= 3.0
+            assert 1 <= len(alive) <= ep.max_platforms
+
+
+def test_megadiverse_episodes_deterministic():
+    names = [f"kind{i}" for i in range(4)]
+    a = events.megadiverse_episodes(names, n_episodes=3, seed=5)
+    b = events.megadiverse_episodes(names, n_episodes=3, seed=5)
+    assert events.suite_digest(a) == events.suite_digest(b)
+    c = events.megadiverse_episodes(names, n_episodes=3, seed=6)
+    assert events.suite_digest(a) != events.suite_digest(c)
+
+
+def test_simulator_applies_new_kinds():
+    """PRICE_SHOCK reprices like a tick; CONTENTION scales the slot's
+    effective compute rates without touching prices."""
+    base, catalog = _market()
+    names = [k.name for k in catalog]
+    ep = events.generate_episode(names, seed=0, **KW)
+    fleet = simulator.Fleet.from_episode(catalog, base.n, ep)
+    name = fleet.slots[0].instance
+    p0 = fleet.problem()
+    fleet.apply_event(events.MarketEvent(
+        1.0, events.PRICE_SHOCK, name,
+        (("price_scale", 1.7), ("factor", 1.7))))
+    p1 = fleet.problem()
+    i = p1.platform_names.index(name)
+    np.testing.assert_allclose(p1.pi[i], p0.pi[i] * 1.7)
+    np.testing.assert_allclose(p1.beta[i], p0.beta[i])
+    fleet.apply_event(events.MarketEvent(
+        2.0, events.CONTENTION, name,
+        (("throughput_scale", 2.0),)))
+    p2 = fleet.problem()
+    np.testing.assert_allclose(p2.beta[i], p1.beta[i] * 2.0)
+    np.testing.assert_allclose(p2.pi[i], p1.pi[i])
+    # contention clears back to parity
+    fleet.apply_event(events.MarketEvent(
+        3.0, events.CONTENTION, name,
+        (("throughput_scale", 1.0),)))
+    np.testing.assert_allclose(fleet.problem().beta[i], p1.beta[i])
+
+
+def test_mixed_tenant_population():
+    """The MC-pricing book composes with synthetic tenant classes into
+    ONE allocation problem over the shared platform axis, with exact
+    per-tenant column attribution — and the combined problem replays a
+    market episode like any other workload."""
+    from repro.market import tenants
+
+    base, catalog = _market()
+    combined, slices = tenants.mixed_pricing_population(base, seed=0)
+    assert combined.mu == base.mu
+    assert combined.tau == sum(s.stop - s.start for s in slices.values())
+    assert set(slices) == {"mc_pricing", "batch_analytics",
+                           "interactive"}
+    np.testing.assert_array_equal(
+        combined.beta[:, slices["mc_pricing"]], base.beta)
+    # deterministic synthesis
+    again, _ = tenants.mixed_pricing_population(base, seed=0)
+    np.testing.assert_array_equal(combined.beta, again.beta)
+    np.testing.assert_array_equal(combined.n, again.n)
+    # the mixed problem rides an episode end to end
+    cat2 = simulator.catalog_from_problem(combined)
+    ep = events.generate_episode([k.name for k in cat2], seed=4, **KW,
+                                 **events.MEGADIVERSE_KW)
+    slo = _slo(cat2, combined.n, ep)
+    m = metrics.summarise(simulator.run_episode(
+        cat2, combined.n, ep, ResplitPolicy(), slo_latency=slo))
+    assert m.accrued_cost > 0.0
+    assert np.isfinite(m.avg_makespan)

@@ -1,0 +1,241 @@
+"""Whole-horizon DP oracle: the regret contract, property-tested.
+
+Three properties pin the oracle (see docs/market.md):
+
+* **Non-negative regret** — for any policy whose realised run is folded
+  into the DP's move set via ``paths=``, whole-horizon
+  ``cost_regret >= 0`` holds BY CONSTRUCTION, on every trace, including
+  the adversarial megadiversity kinds (correlated price shocks,
+  preemption storms, capacity droughts, tenant contention).
+* **Dominates the per-interval clairvoyant** — the DP total is <= the
+  per-interval :class:`~repro.market.policies.OraclePolicy` run's total
+  on every trace (that run is just another path column).
+* **Determinism** — same :func:`repro.market.events.trace_digest` in,
+  bit-identical :class:`~repro.market.oracle.OracleTrajectory` out
+  (wall-clock fields excepted).
+
+The 64-seed acceptance sweep (marked ``slow``) covers every event kind,
+old and new, and checks the contract for all shipped online policies.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.market import events, metrics, oracle, simulator
+from repro.market.policies import (OraclePolicy, ResplitPolicy,
+                                   StaticPolicy, WarmMILPPolicy)
+from tests.test_milp import random_problem
+
+EP_KW = dict(horizon_s=3600.0, n_initial=3, max_platforms=6)
+# adversarial megadiversity on top of the base five kinds, scaled so a
+# small trace still sees shocks/storms/contention/droughts regularly
+MEGA_KW = dict(shock_rate=1.5, storm_rate=0.8, contention_rate=1.5,
+               drought_rate=1.0)
+# small DP config: the contract is exact regardless of battery width
+ORACLE_KW = dict(n_caps=3, n_weights=3)
+# regret >= 0 holds by construction; the tolerance only absorbs float
+# summation order between the policy's own accrual and the DP's
+_TOL = 1e-9
+
+
+def _market(seed=3, mu=4, tau=4):
+    base = random_problem(seed, mu, tau)
+    return base, simulator.catalog_from_problem(base)
+
+
+def _slo(catalog, n, episode, factor=0.8):
+    fleet = simulator.Fleet.from_episode(catalog, n, episode)
+    lat = fleet.problem().single_platform_latency()
+    return float(lat[~fleet.dead].min()) * factor
+
+
+def _episode(catalog, seed, **extra):
+    kw = {**EP_KW, **MEGA_KW, **extra}
+    return events.generate_episode([k.name for k in catalog],
+                                   seed=seed, **kw)
+
+
+def _policies():
+    """Every shipped online policy, in cheap-but-exact configs."""
+    milp_kw = dict(node_limit=40, time_limit_s=5.0)
+    return [StaticPolicy(**milp_kw), ResplitPolicy(),
+            WarmMILPPolicy(**milp_kw)]
+
+
+def _solve(base, catalog, ep, slo, paths, **kw):
+    return oracle.whole_horizon_oracle(
+        catalog, base.n, ep, slo_latency=slo, **ORACLE_KW, paths=paths,
+        **kw)
+
+
+def _check_contract(base, catalog, ep, slo, policies):
+    """Run ``policies`` on one trace, fold the realised runs into the
+    DP, and assert the full regret contract.  Returns the trajectory."""
+    runs = [simulator.run_episode(catalog, base.n, ep, pol,
+                                  slo_latency=slo) for pol in policies]
+    mets = [metrics.summarise(r) for r in runs]
+    per_int = simulator.run_episode(
+        catalog, base.n, ep, OraclePolicy(node_limit=40,
+                                          time_limit_s=5.0),
+        slo_latency=slo)
+    per_int_m = metrics.summarise(per_int)
+    traj = _solve(base, catalog, ep, slo, paths=runs + [per_int])
+    scale = max(abs(traj.total_cost), 1.0)
+    for m in mets:
+        rep = metrics.whole_horizon_regret(m, traj)
+        assert rep.cost_regret >= -_TOL * scale, \
+            f"{m.policy} beat the whole-horizon oracle on seed {ep.seed}"
+    # DP <= per-interval clairvoyant: that run is one of its columns
+    assert traj.total_cost <= per_int_m.total_cost + _TOL * scale
+    return traj
+
+
+def _assert_bit_identical(a, b):
+    """Field-by-field equality, wall-clock timings excepted."""
+    for f in dataclasses.fields(oracle.OracleTrajectory):
+        if f.name in ("lp_wall_s", "dp_wall_s"):
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, f.name
+
+
+# ---------------------------------------------------------------------------
+# The contract on fixed adversarial traces
+# ---------------------------------------------------------------------------
+
+def test_regret_nonnegative_on_megadiverse_trace():
+    base, catalog = _market()
+    ep = _episode(catalog, seed=5)
+    slo = _slo(catalog, base.n, ep)
+    traj = _check_contract(base, catalog, ep, slo, _policies())
+    assert traj.n_intervals == len(ep.events) + 1
+    assert traj.trace_digest == events.trace_digest(ep)
+    # every interval chose a real column and the grid tiles the horizon
+    assert len(traj.choice) == traj.n_intervals
+    np.testing.assert_allclose(traj.durations.sum(), ep.horizon_s)
+
+
+def test_oracle_at_most_per_interval_on_base_kinds():
+    """The dominance contract also holds on the original five-kind
+    stream (no megadiversity) — the DP never regresses old traces."""
+    base, catalog = _market(seed=9)
+    ep = events.generate_episode([k.name for k in catalog], seed=21,
+                                 **EP_KW)
+    slo = _slo(catalog, base.n, ep)
+    _check_contract(base, catalog, ep, slo, [ResplitPolicy()])
+
+
+def test_oracle_determinism_same_digest_bit_identical():
+    base, catalog = _market()
+    ep1 = _episode(catalog, seed=17)
+    ep2 = _episode(catalog, seed=17)
+    assert events.trace_digest(ep1) == events.trace_digest(ep2)
+    slo = _slo(catalog, base.n, ep1)
+    t1 = _solve(base, catalog, ep1, slo, paths=())
+    t2 = _solve(base, catalog, ep2, slo, paths=())
+    _assert_bit_identical(t1, t2)
+
+
+def test_switch_cost_monotone_and_bounded():
+    """Charging plan changes can only raise the DP total, and never by
+    more than one switch per interval boundary."""
+    base, catalog = _market()
+    ep = _episode(catalog, seed=8)
+    slo = _slo(catalog, base.n, ep)
+    free = _solve(base, catalog, ep, slo, paths=())
+    sc = 0.05 * max(abs(free.total_cost), 1.0)
+    charged = _solve(base, catalog, ep, slo, paths=(), switch_cost=sc)
+    assert charged.total_cost >= free.total_cost - _TOL
+    assert charged.total_cost <= free.total_cost \
+        + sc * max(free.n_intervals - 1, 0) + _TOL
+    # with free switches the DP is the per-interval lower envelope, so
+    # a realised path can only confirm, not lower, the optimum
+    run = simulator.run_episode(catalog, base.n, ep, ResplitPolicy(),
+                                slo_latency=slo)
+    with_path = _solve(base, catalog, ep, slo, paths=(run,))
+    scale = max(abs(free.total_cost), 1.0)
+    assert with_path.total_cost <= free.total_cost + _TOL * scale
+
+
+def test_sla_penalty_increases_total():
+    base, catalog = _market()
+    ep = _episode(catalog, seed=13)
+    # tight SLO so violations actually occur
+    slo = _slo(catalog, base.n, ep, factor=0.3)
+    a = _solve(base, catalog, ep, slo, paths=())
+    b = _solve(base, catalog, ep, slo, paths=(), sla_penalty_rate=0.5)
+    assert b.total_cost >= a.total_cost - _TOL
+
+
+def test_whole_horizon_regret_rejects_mismatched_traces():
+    base, catalog = _market()
+    ep_a = _episode(catalog, seed=1)
+    ep_b = _episode(catalog, seed=2)
+    slo = _slo(catalog, base.n, ep_a)
+    traj = _solve(base, catalog, ep_a, slo, paths=())
+    run_b = metrics.summarise(simulator.run_episode(
+        catalog, base.n, ep_b, ResplitPolicy(), slo_latency=slo))
+    with pytest.raises(ValueError, match="matched traces"):
+        metrics.whole_horizon_regret(run_b, traj)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis battery: random seeds, random traces
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_regret_contract_random_traces(seed):
+        base, catalog = _market()
+        ep = _episode(catalog, seed=seed)
+        slo = _slo(catalog, base.n, ep)
+        _check_contract(base, catalog, ep, slo, [ResplitPolicy()])
+
+    @given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_oracle_deterministic(seed):
+        base, catalog = _market()
+        ep1 = _episode(catalog, seed=seed)
+        ep2 = _episode(catalog, seed=seed)
+        slo = _slo(catalog, base.n, ep1)
+        _assert_bit_identical(_solve(base, catalog, ep1, slo, paths=()),
+                              _solve(base, catalog, ep2, slo, paths=()))
+
+
+# ---------------------------------------------------------------------------
+# 64-seed acceptance sweep: all policies, all event kinds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sixty_four_seed_sweep_all_kinds_all_policies():
+    """The acceptance gate: across 64 seeded megadiverse traces the
+    whole-horizon regret is non-negative for every shipped policy, the
+    DP never exceeds the per-interval clairvoyant, and the sweep as a
+    whole exercises every event kind (old and new)."""
+    base, catalog = _market()
+    seen_kinds = set()
+    milp_kw = dict(node_limit=40, time_limit_s=5.0)
+    for seed in range(64):
+        ep = _episode(catalog, seed=seed)
+        seen_kinds.update(e.kind for e in ep.events)
+        slo = _slo(catalog, base.n, ep)
+        policies = [StaticPolicy(**milp_kw), ResplitPolicy()]
+        if seed % 8 == 0:        # MILP replans are the expensive ones
+            policies.append(WarmMILPPolicy(**milp_kw))
+        _check_contract(base, catalog, ep, slo, policies)
+    # droughts suppress arrivals rather than emitting events; every
+    # emitting kind must appear somewhere in the sweep
+    assert seen_kinds == set(events.KINDS)

@@ -100,3 +100,49 @@ def test_exact_frontiers_nondominated_and_avoid_dead():
     dead = suite[1].dead
     for point in out[suite[1].name].points:
         assert point.alloc[dead].sum() < 1e-6, "allocated to dead platform"
+
+
+def test_correlated_price_shocks_share_regional_factor():
+    """Platforms in the same region move together: dividing out the
+    latent regional factor leaves only the small idiosyncratic noise."""
+    p = random_problem(5, mu=6, tau=4)
+    for s in scenarios.correlated_price_shocks(p, 4, seed=3,
+                                               idio_sigma=0.0):
+        regions = np.arange(p.mu) % 2
+        for r in (0, 1):
+            vals = s.price_scale[regions == r]
+            interior = (vals > 0.05 + 1e-12) & (vals < 10.0 - 1e-12)
+            # away from the clip bounds the regional factor is exact
+            if interior.all():
+                np.testing.assert_allclose(vals, vals[0])
+        np.testing.assert_array_equal(s.beta_scale, np.ones(p.mu))
+        assert (s.price_scale >= 0.05).all()
+        assert (s.price_scale <= 10.0).all()
+
+
+def test_tenant_contention_scales_beta_only():
+    p = random_problem(6, mu=5, tau=4)
+    for s in scenarios.tenant_contention(p, 4, seed=9):
+        assert ((s.beta_scale == 1.0)
+                | ((s.beta_scale >= 1.2) & (s.beta_scale <= 3.0))).all()
+        np.testing.assert_array_equal(s.price_scale, np.ones(p.mu))
+        assert s.n_alive == p.mu
+        q = s.apply(p)
+        np.testing.assert_allclose(q.beta, p.beta * s.beta_scale[:, None])
+        np.testing.assert_array_equal(q.pi, p.pi)
+
+
+def test_megadiverse_suite_extends_standard_suite():
+    """The widened battery keeps the standard families in place (so
+    committed per-scenario rows stay comparable) and appends the two
+    megadiversity families, deterministically."""
+    p = random_problem(7, mu=4, tau=5)
+    std = scenarios.standard_suite(p, seed=11, n_each=2)
+    mega = scenarios.megadiverse_suite(p, seed=11, n_each=2)
+    assert mega.names[:len(std.names)] == std.names
+    extra = mega.names[len(std.names):]
+    assert extra == ("corr_price_shock_0", "corr_price_shock_1",
+                     "contention_0", "contention_1")
+    again = scenarios.megadiverse_suite(p, seed=11, n_each=2)
+    for sa, sb in zip(mega, again):
+        _assert_scenario_equal(sa, sb)

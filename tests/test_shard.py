@@ -33,10 +33,13 @@ from repro.core import lp
 from repro.launch.mesh import make_solver_mesh
 from tests.test_compact import _skewed_stack
 
-pytestmark = pytest.mark.skipif(
-    len(jax.devices()) < 8,
-    reason="needs 8 (forced) CPU devices; run this file standalone "
-           "with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+pytestmark = [
+    pytest.mark.shard,
+    pytest.mark.skipif(
+        len(jax.devices()) < 8,
+        reason="needs 8 (forced) CPU devices; run this file standalone "
+               "with XLA_FLAGS=--xla_force_host_platform_device_count=8"),
+]
 
 
 @pytest.fixture(scope="module")
